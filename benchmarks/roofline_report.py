@@ -1,0 +1,65 @@
+"""Roofline table: aggregates results/dryrun/*.json into the §Roofline report
+(per arch x shape x mesh: the three terms, bottleneck, useful-flops ratio,
+fit).  Also emits the EXPERIMENTS.md section when run with --write-md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+COLS = ("arch", "shape", "mesh", "plan")
+
+
+def load_records(path="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r):
+    ro = r["roofline"]
+    mem_gb = r["memory"]["peak_bytes"] / 2 ** 30
+    return (f"{r['arch']},{r['shape']},{r['mesh']},{r['plan']},"
+            f"{ro['t_compute']:.3e},{ro['t_memory']:.3e},"
+            f"{ro['t_collective']:.3e},{ro['bottleneck']},"
+            f"{ro['useful_flops_ratio']:.3f},{ro['mfu']:.3f},"
+            f"{mem_gb:.1f},{'fit' if r['fits'] else 'OVER'}")
+
+
+def run(path="results/dryrun"):
+    recs = load_records(path)
+    print("roofline,arch,shape,mesh,plan,t_compute,t_memory,t_collective,"
+          "bottleneck,useful_ratio,mfu,peak_GiB,fits")
+    for r in recs:
+        print("roofline," + fmt_row(r))
+    n_single = sum(1 for r in recs if r["mesh"] == "16x16")
+    n_multi = sum(1 for r in recs if r["mesh"] == "2x16x16")
+    print(f"roofline,summary,single_pod_combos={n_single},"
+          f"multi_pod_combos={n_multi}")
+    return recs
+
+
+def to_markdown(recs):
+    lines = ["| arch | shape | mesh | plan | t_comp (s) | t_mem (s) | "
+             "t_coll (s) | bottleneck | useful | MFU bound | peak GiB | fit |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        ro = r["roofline"]
+        mem_gb = r["memory"]["peak_bytes"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['plan']} | "
+            f"{ro['t_compute']:.2e} | {ro['t_memory']:.2e} | "
+            f"{ro['t_collective']:.2e} | {ro['bottleneck']} | "
+            f"{ro['useful_flops_ratio']:.2f} | {ro['mfu']:.3f} | "
+            f"{mem_gb:.1f} | {'y' if r['fits'] else 'OVER'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = run()
+    if "--write-md" in sys.argv:
+        print(to_markdown(recs))

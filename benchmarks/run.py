@@ -1,0 +1,45 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-fig4]
+
+Emits CSV lines (benchmark,key=value,...) for:
+  fig4   — epochs-to-converge vs global batch (REAL CPU convergence runs)
+  fig3   — the paper's illustrative hybrid-crossover scenario
+  table1 — 2-way MP per-step speedups (DLPlacer / pipeline / tensor-MP)
+  fig5   — hybrid vs DP-only projections + the paper's headline claims
+  fig8   — DLPlacer prediction vs simulated silicon
+  roofline — the dry-run roofline table (if results/dryrun exists)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    full = "--full" in sys.argv
+    print("benchmark,start")
+
+    from benchmarks import (fig3_example, fig5_hybrid, fig8_dlplacer,
+                            table1_mp_speedup)
+    table1_mp_speedup.run()
+    fig3_example.run()
+    fig5_hybrid.run()
+    fig8_dlplacer.run()
+
+    if "--skip-fig4" not in sys.argv:
+        from benchmarks import fig4_epochs
+        fig4_epochs.run(quick=not full)
+
+    try:
+        from benchmarks import roofline_report
+        roofline_report.run()
+    except FileNotFoundError:
+        print("roofline,skipped (run launch/dryrun.py first)")
+
+    print(f"benchmark,done,wall_s={time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

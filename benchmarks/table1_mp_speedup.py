@@ -1,0 +1,94 @@
+"""Table 1 reproduction: 2-way MP per-step speedup per network.
+
+- Inception-V3: DLPlacer ILP placement on the analytic block DFG (the paper's
+  §6 case study; paper: 1.32x with 2 GPUs).
+- GNMT / BigLSTM: pipeline parallelism (paper: 1.15x / 1.22x) — modeled with
+  the GPipe bubble + inter-stage activation transfer on the measured DFG
+  costs.
+
+Also reports tensor-MP SU^M for the assigned TPU archs (the planner's Table-1
+analogue on the ICI torus).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.dlplacer import (DFG, HardwareGraph, simulated_silicon,
+                                 solve_placement)
+from repro.core.comm import HardwareModel
+from repro.core.planner import mp_step_speedup
+from repro.models.inception import inception_dfg
+from repro.parallel.pipeline import pipeline_step_speedup
+
+PAPER_TABLE1 = {"inception_v3": 1.32, "gnmt": 1.15, "biglstm": 1.22}
+
+
+def inception_mp_speedup(n_devices: int = 2, budget_s: float = 30.0):
+    nodes, edges = inception_dfg(batch=32)
+    dfg = DFG.from_analytic(nodes, edges)
+    hw = HardwareGraph(n_devices=n_devices)
+    res = solve_placement(dfg, hw, time_budget_s=budget_s)
+    return res
+
+
+def pipeline_mp_speedup(network: str, m: int = 2) -> float:
+    """GNMT/BigLSTM pipeline SU^M from first principles: GPipe bubble +
+    stage imbalance + fused-RNN kernel launch overheads + inter-stage
+    activation transfer.  The paper (§4.4) attributes its modest 1.15x/1.22x
+    to exactly 'kernel overheads and pipeline imbalance'."""
+    launch = 30e-6            # per fused-RNN kernel launch (CuDNN-class)
+    hw = HardwareGraph(n_devices=m)
+    if network == "gnmt":
+        # 4 enc + 4 dec LSTM layers of 1024 + attention + softmax; the
+        # decoder stage carries attention+softmax => ~58% of the work
+        flops = 2 * 8 * 8 * 1024 * 1024 * 50 * 128
+        act = 128 * 50 * 1024 * 4
+        heavy_frac = 0.58
+        kernels_per_stage = 50 * 4        # seq steps x layers (fused per layer)
+    else:  # biglstm: 2 LSTM layers hidden 8192 (proj 1024) + big softmax
+        flops = 2 * 2 * 4 * (1024 * 8192 + 1024 * 8192) * 20 * 128
+        act = 128 * 20 * 1024 * 4
+        heavy_frac = 0.60                  # softmax-projection stage heavier
+        kernels_per_stage = 20 * 2
+    n_micro = 4
+    t_total = flops / hw.flops_per_s
+    t_heavy = t_total * heavy_frac / 1.0   # heaviest stage per step
+    t_micro = t_heavy / n_micro
+    t_comm = act / n_micro / hw.bw
+    t_launch = kernels_per_stage / n_micro * launch
+    ticks = n_micro + m - 1
+    t_pipe = ticks * (t_micro + t_launch) + t_comm * ticks
+    t_single = t_total + kernels_per_stage * 2 * launch / 1.0
+    return t_single / t_pipe
+
+
+def run():
+    rows = {}
+    t0 = time.time()
+    res = inception_mp_speedup(2)
+    su_inc = res.speedup_vs_single
+    rows["inception_v3"] = su_inc
+    print(f"table1,network=inception_v3,method=dlplacer,su2={su_inc:.3f},"
+          f"paper=1.32,optimal={res.optimal},solve_s={res.solve_s:.1f}",
+          flush=True)
+    for net in ("gnmt", "biglstm"):
+        su = pipeline_mp_speedup(net)
+        rows[net] = su
+        print(f"table1,network={net},method=pipeline,su2={su:.3f},"
+              f"paper={PAPER_TABLE1[net]}")
+    for net, su in rows.items():
+        ok = abs(su - PAPER_TABLE1[net]) / PAPER_TABLE1[net] < 0.25
+        print(f"table1,claim_{net}_within_25pct={'PASS' if ok else 'FAIL'}")
+    # tensor-MP SU^M for the assigned archs (TPU adaptation)
+    hw = HardwareModel()
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        su2 = mp_step_speedup(cfg, 2, hw)
+        su16 = mp_step_speedup(cfg, 16, hw)
+        print(f"table1,arch={arch},tensor_mp_su2={su2:.3f},su16={su16:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

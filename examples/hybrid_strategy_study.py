@@ -1,0 +1,37 @@
+"""The paper's core artifact as a study: for every assigned architecture,
+sweep device budgets, evaluate DP-only vs hybrid (Eq. 4 vs Eq. 5), find the
+crossover point, and print the planner's chosen strategy.
+
+    PYTHONPATH=src python examples/hybrid_strategy_study.py
+"""
+from repro.configs import ARCH_IDS, get_config
+from repro.core.analytical import speedup_dp, speedup_hybrid
+from repro.core.planner import HybridPlanner, default_epoch_model
+
+BUDGETS = [16, 64, 256, 512, 2048]
+
+print(f"{'arch':24s} {'crossover':>9s}  " +
+      "  ".join(f"{d:>11d}" for d in BUDGETS))
+print(f"{'':24s} {'(m=2)':>9s}  " +
+      "  ".join(f"{'dpxmp':>11s}" for _ in BUDGETS))
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                            se_perfect=False)
+    xo = planner.crossover(m=2)
+    cells = []
+    for d in BUDGETS:
+        c = planner.best(d)
+        cells.append(f"{c.dp*c.pods}x{c.mp} ({c.speedup:5.0f})")
+    print(f"{arch:24s} {str(xo):>9s}  " + "  ".join(f"{c:>11s}" for c in cells))
+
+print("\nDetail: llama3.2-1b at 512 devices (Eq. 4 vs Eq. 5):")
+cfg = get_config("llama3_2_1b")
+planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                        se_perfect=False)
+run = planner.run
+for m in (1, 2, 4, 8, 16):
+    n = 512 // m
+    su = speedup_hybrid(run, n, m)
+    print(f"  {n:4d}-way DP x {m:2d}-way MP: SU = {su:8.1f}"
+          + ("   <- DP-only (Eq. 4)" if m == 1 else ""))

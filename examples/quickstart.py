@@ -1,0 +1,54 @@
+"""Quickstart: the public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. pick an assigned architecture config (reduced for CPU),
+2. ask the paper's HybridPlanner how to parallelize a 256-chip budget,
+3. train a few steps on the synthetic LM task,
+4. generate tokens with the serving engine.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.planner import HybridPlanner, default_epoch_model
+from repro.data import make_lm_dataset
+from repro.models import build_model
+from repro.optim import adamw, warmup_cosine
+from repro.serve.engine import ServeEngine
+from repro.train.steps import init_train_state, make_train_step
+
+# --- 1. architecture ---------------------------------------------------------
+cfg = get_config("llama3_2_1b").reduced()
+print(f"arch: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+
+# --- 2. the paper's planner: how should 256 chips be split? ------------------
+planner = HybridPlanner(get_config("llama3_2_1b"),
+                        epoch_model=default_epoch_model(get_config("llama3_2_1b")),
+                        se_perfect=False)
+choice = planner.best(256)
+print(f"planner: {choice.dp}-way DP x {choice.mp}-way MP "
+      f"(SU={choice.speedup:.1f}, SU^M={choice.su_m:.2f}, "
+      f"SE_N={choice.se_n:.3f}, E1/EN={choice.epochs_ratio:.3f})")
+print(f"crossover (m=2): hybrid first wins at "
+      f"{planner.crossover(m=2)} devices")
+
+# --- 3. train ----------------------------------------------------------------
+api = build_model(cfg)
+data = make_lm_dataset(vocab=64, seq_len=32, n_items=512)
+opt = adamw(warmup_cosine(5e-3, 5, 50))
+step = jax.jit(make_train_step(api, opt), donate_argnums=(0,))
+state = init_train_state(api, opt, jax.random.PRNGKey(0))
+for i, batch in enumerate(data.epoch(0, 16)):
+    if i >= 30:
+        break
+    state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+    if i % 10 == 0:
+        print(f"step {i:3d} loss {float(m['loss']):.4f} "
+              f"(floor {data.entropy:.4f})")
+
+# --- 4. serve ----------------------------------------------------------------
+engine = ServeEngine(api, state.params)
+prompt = {"tokens": jnp.array([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)}
+out = engine.generate(prompt, max_new_tokens=8)
+print("generated:", out.tokens[0].tolist())

@@ -1,0 +1,5 @@
+"""repro: hybrid data/model-parallel JAX training framework reproducing
+Pal et al. 2019, "Optimizing Multi-GPU Parallelization Strategies for Deep
+Learning Training" (IEEE Micro), adapted to multi-pod TPU."""
+
+__version__ = "1.0.0"

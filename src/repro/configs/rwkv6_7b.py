@@ -1,0 +1,9 @@
+"""RWKV-6 (Finch) 7B — attention-free, data-dependent decay [arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=14336,
+    vocab_size=65536, rwkv=True, head_dim=64,
+    source="Finch — data-dependent decay [arXiv:2404.05892]",
+)

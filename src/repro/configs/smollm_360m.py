@@ -1,0 +1,8 @@
+"""SmolLM-360M llama-arch small [hf:HuggingFaceTB/SmolLM-135M]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab_size=49152, source="llama-arch small [hf:HuggingFaceTB/SmolLM-135M]",
+)

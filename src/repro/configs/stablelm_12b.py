@@ -1,0 +1,8 @@
+"""StableLM-2 12B dense [hf:stabilityai/stablelm-2-1_6b family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824,
+    vocab_size=100352, source="[hf:stabilityai/stablelm-2-1_6b]",
+)

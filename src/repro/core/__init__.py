@@ -1,0 +1,14 @@
+"""The paper's contribution: analytical hybrid-parallelism framework,
+DLPlacer, and the roofline machinery."""
+from repro.core.analytical import (TrainingRun, best_strategy,
+                                   crossover_device_count, hybrid_wins,
+                                   speedup_dp, speedup_hybrid)
+from repro.core.comm import HardwareModel, ring_all_reduce_time, scaling_efficiency
+from repro.core.planner import HybridPlanner, default_epoch_model
+from repro.core.stateff import EpochModel, fit_epoch_model, paper_epoch_model
+
+__all__ = ["TrainingRun", "best_strategy", "crossover_device_count",
+           "hybrid_wins", "speedup_dp", "speedup_hybrid", "HardwareModel",
+           "ring_all_reduce_time", "scaling_efficiency", "HybridPlanner",
+           "default_epoch_model", "EpochModel", "fit_epoch_model",
+           "paper_epoch_model"]

@@ -1,0 +1,106 @@
+"""The paper's analytical framework (§3, Eqs. 1-6), as executable code.
+
+    C = T x S x E                                   (Eq. 1)
+    SU_N = SE_N * N * E_1/E_N                       (Eq. 3, N-way DP)
+    SU_{M*N} = SE_{M*N} * M * N * E_1/E_{M*N}       (Eq. 4, DP-only at M*N)
+    SU_N^M = SU^M * SE_N * N * E_1/E_N              (Eq. 5, hybrid)
+    hybrid wins iff  SU^M > M * SE_{M*N}/SE_N * E_N/E_{M*N}   (Eq. 6)
+
+``TrainingRun`` carries the per-network inputs (step time on one device, grad
+bytes, epoch model, mini-batch size); the functions below evaluate the
+speedup curves the paper plots in Fig. 3/5 and the crossover criterion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.core.comm import HardwareModel, scaling_efficiency
+from repro.core.stateff import EpochModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainingRun:
+    """Inputs of the analytical model for one network on one system."""
+
+    name: str
+    t1: float                      # time per step on a single device (s)
+    grad_bytes: float              # gradient exchange size (bytes)
+    mini_batch: int                # per-worker batch (constant, paper §3.1)
+    epoch_model: EpochModel
+    dataset_size: int              # items per epoch
+    mp_speedup: Dict[int, float]   # M -> SU^M (paper Table 1 / DLPlacer)
+    hw: HardwareModel = HardwareModel()
+    se_perfect: bool = True        # paper's conservative SE_N = 1
+
+
+def se(run: TrainingRun, n: int, *, overlap: float = 0.0) -> float:
+    """Scaling efficiency SE_N of N-way DP."""
+    return scaling_efficiency(run.grad_bytes, run.t1, n, run.hw,
+                              overlap=overlap,
+                              assume_perfect=run.se_perfect)
+
+
+def epochs_ratio(run: TrainingRun, n_workers: int) -> float:
+    """E_1 / E_N where N workers give global batch N * mini_batch."""
+    e1 = run.epoch_model.epochs(run.mini_batch)
+    en = run.epoch_model.epochs(n_workers * run.mini_batch)
+    if en == float("inf"):
+        return 0.0
+    return e1 / en
+
+
+def speedup_dp(run: TrainingRun, n: int) -> float:
+    """Eq. 3: SU_N of N-way DP over a single device."""
+    return se(run, n) * n * epochs_ratio(run, n)
+
+
+def speedup_hybrid(run: TrainingRun, n_workers: int, m: int) -> float:
+    """Eq. 5: N-way DP of M-way-MP workers, M*N devices total."""
+    su_m = run.mp_speedup.get(m, 0.0) if m > 1 else 1.0
+    return su_m * se(run, n_workers) * n_workers * epochs_ratio(run, n_workers)
+
+
+def hybrid_wins(run: TrainingRun, n: int, m: int) -> bool:
+    """Eq. 6 at M*N total devices: is N-way DP x M-way MP better than
+    (M*N)-way DP?"""
+    return speedup_hybrid(run, n, m) > speedup_dp(run, m * n)
+
+
+def crossover_device_count(run: TrainingRun, m: int = 2,
+                           max_devices: int = 4096) -> Optional[int]:
+    """Smallest total device count D (power of 2) where the hybrid strategy
+    (D/m-way DP x m-way MP) beats DP-only at D devices — the paper's 'tipping
+    point'."""
+    d = m
+    while d <= max_devices:
+        if hybrid_wins(run, d // m, m):
+            return d
+        d *= 2
+    return None
+
+
+def best_strategy(run: TrainingRun, total_devices: int) -> Dict:
+    """Arg-max over all factorizations total = N * M (M in mp_speedup U {1}):
+    the paper's §3.4 choice, generalized to every available M."""
+    best = {"m": 1, "n": total_devices,
+            "speedup": speedup_dp(run, total_devices)}
+    for m, su in sorted(run.mp_speedup.items()):
+        if total_devices % m:
+            continue
+        n = total_devices // m
+        s = speedup_hybrid(run, n, m)
+        if s > best["speedup"]:
+            best = {"m": m, "n": n, "speedup": s}
+    best["convergence_time"] = convergence_time(run, best["n"], best["m"])
+    return best
+
+
+def convergence_time(run: TrainingRun, n_workers: int, m: int = 1) -> float:
+    """Eq. 1 evaluated for a hybrid configuration, in seconds."""
+    su_m = run.mp_speedup.get(m, 1.0) if m > 1 else 1.0
+    t = run.t1 / (se(run, n_workers) * su_m)
+    global_batch = n_workers * run.mini_batch
+    s = run.dataset_size / global_batch
+    e = run.epoch_model.epochs(global_batch)
+    return t * s * e

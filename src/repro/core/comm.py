@@ -1,0 +1,66 @@
+"""Communication cost models (paper §3.1, §3.4 inputs).
+
+Ring all-reduce time (Thakur et al. 2005; Patarasuk & Yuan 2009) over N
+devices for B bytes:  t = 2 * (N-1)/N * B / bw + (N-1) * latency — the model
+behind the paper's scaling-efficiency term SE_N, which it conservatively set
+to 1; we compute it (and also expose the SE_N=1 mode for the paper-faithful
+reproduction).
+
+Hierarchical topologies: intra-pod ICI rings vs pod-crossing DCI — the
+bandwidth cliff that makes SE_{M*N}/SE_N < 1 at pod boundaries, which is
+exactly the regime where the paper's hybrid strategy wins (Eq. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.roofline import DCI_BW, ICI_LINKS, LINK_BW, PEAK_FLOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Per-chip hardware constants + topology (TPU v5e pod defaults)."""
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = 819e9
+    ici_bw: float = ICI_LINKS * LINK_BW   # all usable torus links
+    dci_bw: float = DCI_BW                # inter-pod per chip
+    ici_latency: float = 1e-6
+    dci_latency: float = 10e-6
+    chips_per_pod: int = 256
+    mfu: float = 0.45                     # achievable fraction of peak in T_1
+
+
+def ring_all_reduce_time(bytes_: float, n: int, bw: float,
+                         latency: float) -> float:
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * bytes_ / bw + (n - 1) * latency
+
+
+def hierarchical_all_reduce_time(bytes_: float, n: int, hw: HardwareModel,
+                                 intra_pod_degree: int) -> float:
+    """reduce-scatter intra-pod, all-reduce across pods, all-gather intra-pod."""
+    if n <= intra_pod_degree:
+        return ring_all_reduce_time(bytes_, n, hw.ici_bw, hw.ici_latency)
+    n_pods = n // intra_pod_degree
+    t_intra = ring_all_reduce_time(bytes_, intra_pod_degree, hw.ici_bw,
+                                   hw.ici_latency)
+    t_inter = ring_all_reduce_time(bytes_ / intra_pod_degree, n_pods,
+                                   hw.dci_bw, hw.dci_latency)
+    return t_intra + t_inter
+
+
+def scaling_efficiency(grad_bytes: float, step_compute_time: float, n: int,
+                       hw: HardwareModel, *, overlap: float = 0.0,
+                       assume_perfect: bool = False) -> float:
+    """SE_N = T_1 / T_N for N-way DP (paper §3.1).
+
+    ``assume_perfect`` reproduces the paper's conservative SE_N = 1.
+    ``overlap`` in [0,1): fraction of all-reduce hidden under backward.
+    """
+    if assume_perfect or n <= 1:
+        return 1.0
+    t_ar = hierarchical_all_reduce_time(grad_bytes, n, hw, hw.chips_per_pod)
+    t_ar *= (1.0 - overlap)
+    return step_compute_time / (step_compute_time + t_ar)

@@ -1,0 +1,11 @@
+"""Data pipeline: deterministic synthetic datasets + sharded host feed."""
+from repro.data.synthetic import (
+    MarkovLM,
+    SyntheticImageDataset,
+    SyntheticSeq2Seq,
+    make_lm_dataset,
+)
+from repro.data.pipeline import DataPipeline, shard_batch
+
+__all__ = ["MarkovLM", "SyntheticImageDataset", "SyntheticSeq2Seq",
+           "make_lm_dataset", "DataPipeline", "shard_batch"]

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) with jit'd
+dispatch (ops.py) and pure-jnp oracles (ref.py)."""

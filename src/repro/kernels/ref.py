@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of kernels/).
+
+These are *definitions of correctness*: small, obviously-right implementations
+that the kernels' shape/dtype sweep tests assert_allclose against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Tq,H,hd); k,v: (B,Tk,H,hd) — dense softmax attention."""
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential RWKV6 recurrence (f32).  r,k,v,w: (B,T,H,hd); u: (H,hd)."""
+    from repro.models.rwkv import wkv_scan
+    return wkv_scan(r, k, v, w, u)
+
+
+def gmm_ref(x, w, group_sizes=None):
+    """Grouped matmul oracle: x (G, C, d) @ w (G, d, f) -> (G, C, f)."""
+    return jnp.einsum("gcd,gdf->gcf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """x: (B, d_in); h: (B, H); c: (B, H); wx: (d_in, 4, H); wh: (H_in, 4, H).
+
+    Gate order (i, f, g, o); forget bias +1 (matches models/lstm.py).
+    Returns (h', c')."""
+    gates = jnp.einsum("bd,dgh->bgh", x.astype(jnp.float32), wx.astype(jnp.float32)) \
+        + jnp.einsum("bd,dgh->bgh", h.astype(jnp.float32), wh.astype(jnp.float32)) \
+        + b.astype(jnp.float32)
+    i, f, g, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    c_new = jax.nn.sigmoid(f + 1.0) * c.astype(jnp.float32) \
+        + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)

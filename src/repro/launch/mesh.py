@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data", "model").  Multi-pod: 2 pods =
+    512 chips ("pod", "data", "model"); DP spans pod x data, MP stays
+    intra-pod (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(dp: int, mp: int, pods: int = 1):
+    """Arbitrary hybrid mesh: the planner's (pod, N, M) factorization."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, mp), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((dp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,4 @@
+"""Model zoo: pure-JAX definitions for every assigned architecture family."""
+from repro.models.api import ModelApi, build_model, cross_entropy, make_input_specs
+
+__all__ = ["ModelApi", "build_model", "cross_entropy", "make_input_specs"]

@@ -1,0 +1,243 @@
+"""Unified model API: build step functions and input specs per architecture.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose members are pure functions —
+the train loop, serving engine, and multi-pod dry-run all consume models only
+through this interface.  ``input_specs`` returns ShapeDtypeStructs (no device
+allocation) so ``jax.jit(...).lower(**specs)`` works for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import inception as inc_mod
+from repro.models import lstm as lstm_mod
+from repro.models import transformer as tf_mod
+from repro.models.transformer import ParallelCtx
+
+
+def cross_entropy(logits, labels, n_valid_vocab: int):
+    """Mean token NLL in f32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def vocab_parallel_cross_entropy(logits, labels, n_valid_vocab: int, *,
+                                 mesh, model_axis: str, batch_axes=()):
+    """Cross-entropy over vocab-sharded logits WITHOUT gathering them
+    (§Perf iteration D, Megatron-style).  logits: (B, S, V) sharded on V over
+    ``model_axis``; labels: (B, S).  The all-gather of (B,S,V) logits
+    (~1 GB/chip at llama scale) is replaced by pmax/psum of (B,S) stats.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    v = logits.shape[-1]
+    msz = mesh.shape[model_axis]
+    v_loc = v // msz
+    baxes = tuple(a for a in (batch_axes or ()) if a)
+    bspec = baxes if baxes else None
+
+    def local(lg, lb):
+        lg = lg.astype(jnp.float32)
+        i = jax.lax.axis_index(model_axis)
+        lo = i * v_loc
+        # the max is a numerics-only shift: stop_gradient keeps the exact
+        # logsumexp gradient while avoiding pmax's missing VJP
+        m = jax.lax.stop_gradient(
+            jax.lax.pmax(jax.lax.stop_gradient(lg).max(-1), model_axis))
+        z = jax.lax.psum(jnp.exp(lg - m[..., None]).sum(-1), model_axis)
+        logz = m + jnp.log(z)
+        mask = lb >= 0
+        lb = jnp.maximum(lb, 0)
+        lidx = jnp.clip(lb - lo, 0, v_loc - 1)
+        mine = (lb >= lo) & (lb < lo + v_loc)
+        gold_loc = jnp.take_along_axis(lg, lidx[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(jnp.where(mine, gold_loc, 0.0), model_axis)
+        nll = (logz - gold) * mask
+        num = jax.lax.psum(nll.sum(), baxes) if baxes else nll.sum()
+        den = jax.lax.psum(mask.sum(), baxes) if baxes else mask.sum()
+        return num / jnp.maximum(den, 1)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, model_axis), P(bspec, None)),
+        out_specs=P(), check_vma=False)(logits, labels)
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable                    # key -> params
+    loss_fn: Callable                 # (params, batch, pctx) -> (loss, metrics)
+    prefill: Optional[Callable]       # (params, batch, pctx, capacity, window) -> (logits, cache)
+    decode_fn: Optional[Callable]     # (params, cache, batch, pctx, window) -> (logits, cache)
+
+    def input_specs(self, shape: InputShape, *, reduced: bool = False) -> Dict[str, Any]:
+        return make_input_specs(self.cfg, shape, reduced=reduced)
+
+    def make_batch(self, key, shape: InputShape):
+        """Materialized random batch matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape, reduced=True)
+        out = {}
+        for name, spec in specs.items():
+            key, k = jax.random.split(key)
+            out[name] = _random_like(k, spec)
+        return out
+
+
+def _random_like(key, spec):
+    if isinstance(spec, dict):
+        out = {}
+        for n, s in spec.items():
+            key, k = jax.random.split(key)
+            out[n] = _random_like(k, s)
+        return out
+    if jnp.issubdtype(spec.dtype, jnp.integer):
+        return jax.random.randint(key, spec.shape, 0, 64, dtype=spec.dtype)
+    return (jax.random.normal(key, spec.shape) * 0.02).astype(spec.dtype)
+
+
+# ---------------------------------------------------------------------------
+
+def _decode_window(cfg, shape: InputShape) -> int:
+    """Effective attention window for a decode shape: long_500k forces the
+    sub-quadratic sliding-window variant on otherwise-full-attention archs
+    (DESIGN.md §Arch-applicability)."""
+    if cfg.rwkv:
+        return 0
+    if shape.seq_len > 65536:
+        return cfg.sliding_window or cfg.long_context_window
+    return cfg.sliding_window
+
+
+def make_input_specs(cfg: ModelConfig, shape: InputShape, *, reduced: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    s, b = (shape.seq_len, shape.global_batch)
+    if reduced:
+        s, b = min(s, 128), min(b, 4)
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "cnn":
+        size = 128 if reduced else 299
+        return {"images": jax.ShapeDtypeStruct((b, size, size, 3), act),
+                "labels": jax.ShapeDtypeStruct((b,), i32)}
+    if cfg.name == "gnmt":
+        return {"src": jax.ShapeDtypeStruct((b, s), i32),
+                "tgt": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.name == "biglstm":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+    specs: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        window = _decode_window(cfg, shape)
+        capacity = min(shape.seq_len, window) if window else shape.seq_len
+        if reduced:
+            capacity = min(capacity, 64)
+        cache = jax.eval_shape(
+            lambda: tf_mod.make_cache(cfg, b, capacity, window=window, dtype=act))
+        specs["cache"] = {k: v for k, v in cache.items()}
+        if shape.kind == "decode" and cfg.encoder_layers:
+            pass  # cross-attn K/V live inside the cache
+        return specs
+
+    n_text = s - (cfg.n_prefix_embeds if cfg.n_prefix_embeds else 0)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, max(n_text, 1)), i32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, max(n_text, 1)), i32)
+    if cfg.n_prefix_embeds:
+        npre = min(cfg.n_prefix_embeds, 8) if reduced else cfg.n_prefix_embeds
+        specs["prefix"] = jax.ShapeDtypeStruct((b, npre, cfg.d_model), act)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - npre), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s - npre), i32)
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), act)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
+                remat: bool = True, capacity_factor=1.25) -> ModelApi:
+    if cfg.family == "cnn":
+        reduced = cfg.n_layers <= 3
+
+        def init(key):
+            return inc_mod.inception_init(key, cfg, reduced=reduced)
+
+        def loss_fn(params, batch, pctx=None):
+            logits = inc_mod.inception_forward(cfg, params, batch, reduced=reduced)
+            loss = cross_entropy(logits[:, None, :], batch["labels"][:, None],
+                                 cfg.vocab_size)
+            return loss, {"loss": loss}
+
+        return ModelApi(cfg, init, loss_fn, None, None)
+
+    if cfg.name == "gnmt":
+        def init(key):
+            return lstm_mod.gnmt_init(key, cfg)
+
+        def loss_fn(params, batch, pctx=None):
+            logits = lstm_mod.gnmt_forward(cfg, params, batch)
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+            return loss, {"loss": loss}
+
+        return ModelApi(cfg, init, loss_fn, None, None)
+
+    if cfg.name == "biglstm":
+        def init(key):
+            return lstm_mod.biglstm_init(key, cfg)
+
+        def loss_fn(params, batch, pctx=None):
+            logits = lstm_mod.biglstm_forward(cfg, params, batch)
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+            return loss, {"loss": loss}
+
+        return ModelApi(cfg, init, loss_fn, None, None)
+
+    # --- transformer families ---
+    def init(key):
+        return tf_mod.model_init(key, cfg)
+
+    def loss_fn(params, batch, pctx=None):
+        fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
+        logits, aux = tf_mod.forward(cfg, params, fwd_batch, mode="train",
+                                     pctx=pctx, remat=remat,
+                                     rwkv_chunked=rwkv_chunked,
+                                     capacity_factor=capacity_factor)
+        if (pctx is not None and pctx.mesh is not None
+                and pctx.model_axis is not None
+                and cfg.vocab_padded % pctx.mesh.shape[pctx.model_axis] == 0):
+            loss = vocab_parallel_cross_entropy(
+                logits, batch["labels"], cfg.vocab_size, mesh=pctx.mesh,
+                model_axis=pctx.model_axis,
+                batch_axes=tuple(a for a in pctx.batch_axes if a))
+        else:
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    def prefill(params, batch, pctx=None, capacity: int = 0, window=None):
+        fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
+        logits, cache, _ = tf_mod.forward(cfg, params, fwd_batch, mode="prefill",
+                                          window_override=window, pctx=pctx,
+                                          remat=False, cache_capacity=capacity,
+                                          capacity_factor=capacity_factor)
+        return logits, cache
+
+    def decode_fn(params, cache, batch, pctx=None, window=None):
+        return tf_mod.decode_step(cfg, params, cache, batch,
+                                  window_override=window, pctx=pctx)
+
+    return ModelApi(cfg, init, loss_fn, prefill, decode_fn)

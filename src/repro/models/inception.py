@@ -1,0 +1,216 @@
+"""Inception-V3 in JAX (Szegedy et al. 2015) — the paper's branchy-CNN model.
+
+Faithful block structure (stem, 3x InceptionA, B-reduction, 4x InceptionC,
+D-reduction, 2x InceptionE, pool, fc).  The parallel branches inside each
+block are exactly the DFG parallelism DLPlacer exploits (§6 of the paper);
+``inception_dfg()`` exports the block-level dataflow graph with analytically
+estimated per-op FLOPs/bytes as DLPlacer input — reproducing the paper's
+Inception-V3 case study.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale
+    return {"w": w.astype(dtype), "scale": jnp.ones((cout,), jnp.float32),
+            "bias": jnp.zeros((cout,), jnp.float32)}
+
+
+def conv_bn(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # inference-style folded batch-norm (scale/bias) + relu
+    return jax.nn.relu(y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype))
+
+
+def pool(x, kind, k=3, stride=1, padding="SAME"):
+    if kind == "max":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, k, k, 1), (1, stride, stride, 1), padding)
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                              (1, k, k, 1), (1, stride, stride, 1), padding)
+    n = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add,
+                              (1, k, k, 1), (1, stride, stride, 1), padding)
+    return s / n
+
+
+# Block specs: list of branches; each branch = list of (kh, kw, cout, stride).
+def _inception_a(cin, pool_ch):
+    return [[(1, 1, 64, 1)],
+            [(1, 1, 48, 1), (5, 5, 64, 1)],
+            [(1, 1, 64, 1), (3, 3, 96, 1), (3, 3, 96, 1)],
+            [("avgpool",), (1, 1, pool_ch, 1)]]
+
+
+def _inception_b(cin):  # grid reduction 35->17
+    return [[(3, 3, 384, 2)],
+            [(1, 1, 64, 1), (3, 3, 96, 1), (3, 3, 96, 2)],
+            [("maxpool2",)]]
+
+
+def _inception_c(cin, c7):
+    return [[(1, 1, 192, 1)],
+            [(1, 1, c7, 1), (1, 7, c7, 1), (7, 1, 192, 1)],
+            [(1, 1, c7, 1), (7, 1, c7, 1), (1, 7, c7, 1), (7, 1, c7, 1), (1, 7, 192, 1)],
+            [("avgpool",), (1, 1, 192, 1)]]
+
+
+def _inception_d(cin):  # grid reduction 17->8
+    return [[(1, 1, 192, 1), (3, 3, 320, 2)],
+            [(1, 1, 192, 1), (1, 7, 192, 1), (7, 1, 192, 1), (3, 3, 192, 2)],
+            [("maxpool2",)]]
+
+
+def _inception_e(cin):
+    return [[(1, 1, 320, 1)],
+            [(1, 1, 384, 1), (1, 3, 384, 1)],   # (+ 3x1 sibling merged below)
+            [(1, 1, 384, 1), (3, 1, 384, 1)],
+            [(1, 1, 448, 1), (3, 3, 384, 1), (1, 3, 384, 1)],
+            [(1, 1, 448, 1), (3, 3, 384, 1), (3, 1, 384, 1)],
+            [("avgpool",), (1, 1, 192, 1)]]
+
+
+def _blocks(reduced: bool):
+    if reduced:
+        return [("a", _inception_a(192, 32)), ("b", _inception_b(256)),
+                ("e", _inception_e(768))]
+    return [
+        ("a", _inception_a(192, 32)), ("a", _inception_a(256, 64)),
+        ("a", _inception_a(288, 64)),
+        ("b", _inception_b(288)),
+        ("c", _inception_c(768, 128)), ("c", _inception_c(768, 160)),
+        ("c", _inception_c(768, 160)), ("c", _inception_c(768, 192)),
+        ("d", _inception_d(768)),
+        ("e", _inception_e(1280)), ("e", _inception_e(2048)),
+    ]
+
+
+def inception_init(key, cfg, image_size: int = 299, reduced: bool = False):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = iter(jax.random.split(key, 256))
+    stem = [conv_init(next(ks), 3, 3, 3, 32, dtype),
+            conv_init(next(ks), 3, 3, 32, 32, dtype),
+            conv_init(next(ks), 3, 3, 32, 64, dtype),
+            conv_init(next(ks), 1, 1, 64, 80, dtype),
+            conv_init(next(ks), 3, 3, 80, 192, dtype)]
+    blocks = []
+    cin = 192
+    for kind, spec in _blocks(reduced):
+        branches = []
+        for branch in spec:
+            ops, c = [], cin
+            for op in branch:
+                if isinstance(op[0], str):
+                    continue  # pools are parameter-free; forward reads the spec
+                kh, kw, cout, stride = op
+                ops.append(conv_init(next(ks), kh, kw, c, cout, dtype))
+                c = cout
+            branches.append(ops)
+        blocks.append(branches)
+        cin = _out_channels(spec, cin)
+    head = {"fc": (jax.random.normal(next(ks), (cin, cfg.vocab_size)) * 0.01
+                   ).astype(dtype)}
+    return {"stem": stem, "blocks": blocks, "head": head}
+
+
+def _out_channels(spec, cin):
+    total = 0
+    for branch in spec:
+        last_conv = None
+        for op in branch:
+            if not isinstance(op[0], str):
+                last_conv = op
+        if last_conv is None:  # pure pool branch keeps cin
+            total += cin
+        else:
+            total += last_conv[2]
+    return total
+
+
+def inception_forward(cfg, params, batch, reduced: bool = False):
+    """batch: dict(images (B,H,W,3)).  Returns logits (B, n_classes)."""
+    x = batch["images"].astype(jnp.dtype(cfg.dtype))
+    p = params["stem"]
+    x = conv_bn(p[0], x, stride=2, padding="VALID")
+    x = conv_bn(p[1], x, padding="VALID")
+    x = conv_bn(p[2], x)
+    x = pool(x, "max", 3, 2, "VALID")
+    x = conv_bn(p[3], x, padding="VALID")
+    x = conv_bn(p[4], x, padding="VALID")
+    x = pool(x, "max", 3, 2, "VALID")
+    specs = _blocks(reduced)
+    for (kind, spec), branches in zip(specs, params["blocks"]):
+        outs = []
+        for branch_spec, branch in zip(spec, branches):
+            y = x
+            conv_it = iter(branch)
+            for op_spec in branch_spec:
+                if isinstance(op_spec[0], str):
+                    if op_spec[0] == "avgpool":
+                        y = pool(y, "avg", 3, 1, "SAME")
+                    else:  # maxpool2: grid reduction
+                        y = pool(y, "max", 3, 2, "VALID")
+                else:
+                    stride = op_spec[3]
+                    y = conv_bn(next(conv_it), y, stride=stride,
+                                padding="VALID" if stride == 2 else "SAME")
+            outs.append(y)
+        x = jnp.concatenate(outs, axis=-1)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"]["fc"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# DFG export for DLPlacer (the paper's §6 case study)
+# ---------------------------------------------------------------------------
+
+def inception_dfg(image_size: int = 299, batch: int = 32):
+    """Block-level DFG with analytic per-op costs — DLPlacer input.
+
+    Returns (nodes, edges): nodes = {name: dict(flops, bytes_out, mem)};
+    edges = [(src, dst)].  Grid sizes follow the standard V3 schedule
+    (299 -> 35x35x288 -> 17x17x768 -> 8x8x2048).
+    """
+    nodes, edges = {}, []
+
+    def add(name, flops, bytes_out, deps):
+        nodes[name] = {"flops": float(flops), "bytes_out": float(bytes_out),
+                       "mem": float(bytes_out)}
+        for d in deps:
+            edges.append((d, name))
+
+    add("stem", 2 * 3.3e9 * batch / 32, batch * 35 * 35 * 192 * 4, [])
+    prev = "stem"
+    grid = {"a": (35, 288), "b": (17, 768), "c": (17, 768), "d": (8, 1280),
+            "e": (8, 2048)}
+    for bi, (kind, spec) in enumerate(_blocks(reduced=False)):
+        g, cout_total = grid[kind]
+        branch_names = []
+        for j, branch in enumerate(spec):
+            flops = 0.0
+            cin = 288 if kind == "a" else (768 if kind in "bc" else
+                                           (1280 if kind == "d" else 2048))
+            c = cin
+            for op in branch:
+                if isinstance(op[0], str):
+                    continue
+                kh, kw, cout, stride = op
+                flops += 2 * kh * kw * c * cout * g * g * batch
+                c = cout
+            name = f"blk{bi}_{kind}{j}"
+            add(name, flops, batch * g * g * c * 4, [prev])
+            branch_names.append(name)
+        concat = f"blk{bi}_concat"
+        add(concat, batch * g * g * cout_total,
+            batch * g * g * cout_total * 4, branch_names)
+        prev = concat
+    add("head", 2 * 2048 * 1000 * batch, batch * 1000 * 4, [prev])
+    return nodes, edges

@@ -1,0 +1,127 @@
+"""The paper's RNN evaluation models in JAX: GNMT (4-layer LSTM enc-dec with
+attention, Wu et al. 2016) and BigLSTM (Jozefowicz et al. 2016: embedding 1024,
+2 LSTM layers hidden 8192 with 1024 projection, big softmax).
+
+These are the models the paper pipelines (Table 1: GNMT 1.15x, BigLSTM 1.22x
+2-way MP) — the pipeline runtime in ``repro.parallel.pipeline`` partitions
+their layer stacks into stages.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, embed_init
+
+
+def lstm_cell_init(key, d_in: int, d_h: int, d_proj: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wx": dense_init(ks[0], d_in, 4 * d_h, dtype),
+        "wh": dense_init(ks[1], d_proj or d_h, 4 * d_h, dtype),
+        "b": jnp.zeros((4 * d_h,), jnp.float32),
+    }
+    if d_proj:
+        p["wp"] = dense_init(ks[2], d_h, d_proj, dtype)
+    return p
+
+
+def lstm_cell(p, x, state):
+    """x: (B, d_in); state: (h, c).  Returns (new_state, output)."""
+    h, c = state
+    gates = x @ p["wx"].astype(x.dtype) + h @ p["wh"].astype(x.dtype) \
+        + p["b"].astype(x.dtype)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    out = jax.nn.sigmoid(o) * jnp.tanh(c)
+    if "wp" in p:
+        out = out @ p["wp"].astype(x.dtype)
+    return (out, c), out
+
+
+def lstm_layer(p, xs, state=None):
+    """xs: (B, T, d_in) -> (B, T, d_out); scan over time."""
+    b = xs.shape[0]
+    d_h = p["wx"].shape[1] // 4
+    d_out = p["wp"].shape[1] if "wp" in p else d_h
+    if state is None:
+        state = (jnp.zeros((b, d_out), xs.dtype), jnp.zeros((b, d_h), xs.dtype))
+
+    def step(st, x):
+        return lstm_cell(p, x, st)
+
+    state, ys = jax.lax.scan(step, state, xs.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), state
+
+
+# ---------------------------------------------------------------------------
+# GNMT
+# ---------------------------------------------------------------------------
+
+def gnmt_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, v, n = cfg.d_model, cfg.vocab_padded, cfg.n_layers
+    ks = jax.random.split(key, 4 + 2 * n)
+    params = {
+        "src_embed": embed_init(ks[0], v, d, dtype),
+        "tgt_embed": embed_init(ks[1], v, d, dtype),
+        "enc": [lstm_cell_init(ks[2 + i], d if i == 0 else d, d, 0, dtype)
+                for i in range(n)],
+        "dec": [lstm_cell_init(ks[2 + n + i], (2 * d) if i == 0 else d, d, 0, dtype)
+                for i in range(n)],
+        "attn_q": dense_init(ks[2 + 2 * n], d, d, dtype),
+        "head": dense_init(ks[3 + 2 * n], d, v, dtype),
+    }
+    return params
+
+
+def gnmt_forward(cfg, params, batch):
+    """batch: dict(src (B,S), tgt (B,T)).  Returns logits (B,T,V)."""
+    dt = jnp.dtype(cfg.dtype)
+    src = jnp.take(params["src_embed"], batch["src"], axis=0).astype(dt)
+    x = src
+    for i, lp in enumerate(params["enc"]):
+        y, _ = lstm_layer(lp, x)
+        x = y if i == 0 else x + y                       # residual from layer 2
+    enc_out = x                                          # (B, S, d)
+    tgt = jnp.take(params["tgt_embed"], batch["tgt"], axis=0).astype(dt)
+    # Luong attention over encoder states from the first decoder layer's
+    # output; attention context fed to subsequent layers (GNMT-style).
+    y0, _ = lstm_layer(params["dec"][0],
+                       jnp.concatenate([tgt, jnp.zeros_like(tgt)], -1))
+    q = y0 @ params["attn_q"].astype(dt)
+    scores = jnp.einsum("btd,bsd->bts", q, enc_out) / math.sqrt(cfg.d_model)
+    ctx = jnp.einsum("bts,bsd->btd", jax.nn.softmax(scores, -1), enc_out)
+    x = y0 + ctx
+    for lp in params["dec"][1:]:
+        y, _ = lstm_layer(lp, x)
+        x = x + y
+    return x @ params["head"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# BigLSTM
+# ---------------------------------------------------------------------------
+
+def biglstm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, v, dh = cfg.d_model, cfg.vocab_padded, cfg.d_ff
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    return {
+        "embed": embed_init(ks[0], v, d, dtype),
+        "lstm": [lstm_cell_init(ks[1 + i], d, dh, d, dtype)
+                 for i in range(cfg.n_layers)],
+        "head": dense_init(ks[1 + cfg.n_layers], d, v, dtype),
+    }
+
+
+def biglstm_forward(cfg, params, batch):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    for lp in params["lstm"]:
+        y, _ = lstm_layer(lp, x)
+        x = x + y
+    return x @ params["head"].astype(dt)

@@ -1,0 +1,198 @@
+"""RWKV-6 ("Finch") blocks — attention-free, data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix recurrence per head (key dim = value dim = head_dim):
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+
+with data-dependent decay w_t = exp(-exp(w0 + LoRA(x_t))) in (0, 1), receptance
+r, key k, value v from token-shifted projections, and bonus u for the current
+token.  Sequential form is a lax.scan; the chunked-parallel form (processing C
+tokens per scan step with intra-chunk matmuls — the MXU-friendly variant) is
+``wkv_chunked`` and is bit-validated against the scan in tests.  Decode carries
+(S, last_x) state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import analysis_unroll, dense_init, rms_norm
+
+
+def rwkv_layer_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.head_dim or 64
+    n_heads = d // hd
+    lora = max(32, d // 64)
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "tm": {  # time mix
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_v": jnp.full((d,), 0.5, jnp.float32),
+            "mu_w": jnp.full((d,), 0.5, jnp.float32),
+            "mu_g": jnp.full((d,), 0.5, jnp.float32),
+            "wr": dense_init(ks[0], d, d, dtype),
+            "wk": dense_init(ks[1], d, d, dtype),
+            "wv": dense_init(ks[2], d, d, dtype),
+            "wg": dense_init(ks[3], d, d, dtype),
+            "wo": dense_init(ks[4], d, d, dtype),
+            # decay: w0 + tanh(x @ a1) @ a2 (LoRA)
+            "w0": jnp.linspace(-6.0, -1.0, d, dtype=jnp.float32).reshape(n_heads, hd).reshape(-1),
+            "wa1": dense_init(ks[5], d, lora, jnp.float32),
+            "wa2": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(jnp.float32),
+            "u": (jax.random.normal(ks[7], (n_heads, hd)) * 0.1).astype(jnp.float32),
+            "ln_x": jnp.ones((d,), jnp.float32),
+        },
+        "cm": {  # channel mix
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": dense_init(ks[8], d, cfg.d_ff, dtype),
+            "wv": dense_init(ks[9], cfg.d_ff, d, dtype),
+            "wr": dense_init(ks[10], d, d, dtype),
+        },
+    }
+
+
+def _token_shift(x, last_x):
+    """x: (B,T,d); last_x: (B,d) from the previous step/segment."""
+    prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def wkv_scan(r, k, v, w, u):
+    """Sequential WKV.  r,k,v,w: (B,T,H,hd); u: (H,hd) -> (out (B,T,H,hd), S).
+
+    All math in f32; S: (B,H,hd,hd) with layout S[key_dim, value_dim].
+    """
+    b, t, h, hd = r.shape
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs          # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hdk,hdv)
+        att = S + u[None, :, :, None] * kv                  # bonus for current
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    S, out = jax.lax.scan(step, S0, xs)
+    return out.transpose(1, 0, 2, 3), S
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int = 64):
+    """Chunked-parallel WKV: identical math, O(T/chunk) sequential steps.
+
+    Within a chunk, cross-token attention uses decay-product matrices so the
+    inner work is dense matmuls (MXU-aligned); the recurrent state advances
+    once per chunk.
+    """
+    b, t, h, hd = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    wc = w.astype(f32).reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    logw = jnp.log(jnp.maximum(wc, 1e-38))                   # (n,b,h,c,hd)
+    cum = jnp.cumsum(logw, axis=3)                           # inclusive
+    cum_excl = cum - logw
+
+    def step(S, xs):
+        rc_, kc_, vc_, cum_, cume_, w_ = xs                  # (b,h,c,hd)
+        total = cum_[:, :, -1:, :]                           # (b,h,1,hd)
+        # inter-chunk: r_i decayed-from-state
+        r_dec = rc_ * jnp.exp(cume_)                         # (b,h,c,hd)
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, S)
+        # intra-chunk pairwise: scores[i,j] = sum_k r_ik k_jk exp(cume_i - cum_j)
+        # for j < i, computed as (r*exp(cume)) @ (k*exp(-cum))^T.  Note
+        # cume_i - cum_j = sum of logw over (j, i-1] <= 0 whenever j < i, so the
+        # masked entries are the only ones where exp() can blow up — the
+        # per-factor split is still safe in f32 for |cum| < ~80; decays are
+        # exp(-exp(.)) <= 1 so cum is monotonically decreasing and bounded by
+        # the chunk size.
+        a = rc_ * jnp.exp(cume_)
+        bmat = kc_ * jnp.exp(-cum_)
+        scores = jnp.einsum("bhck,bhdk->bhcd", a, bmat)
+        ii = jnp.arange(chunk)
+        causal = (ii[:, None] > ii[None, :]).astype(f32)
+        scores = scores * causal[None, None]
+        diag = jnp.einsum("bhck,bhck->bhc", rc_ * u[None, :, None, :], kc_)
+        intra = jnp.einsum("bhcd,bhdv->bhcv", scores, vc_) + diag[..., None] * vc_
+        out = inter + intra
+        # advance state: S' = diag(exp(total)) S + sum_j exp(total - cum_j) k_j v_j^T
+        kw = kc_ * jnp.exp(total - cum_)
+        S = jnp.exp(total).transpose(0, 1, 3, 2) * S + jnp.einsum(
+            "bhck,bhcv->bhkv", kw, vc_)
+        return S, out
+
+    S0 = jnp.zeros((b, h, hd, hd), f32)
+    S, out = jax.lax.scan(step, S0, (rc, kc, vc, cum, cum_excl, wc),
+                          unroll=n if analysis_unroll() else 1)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, t, h, hd)
+    return out, S
+
+
+def rwkv_time_mix(p, x, last_x, S, cfg, chunked: bool = False):
+    """x: (B,T,d).  Returns (out, new_last_x, new_S)."""
+    b, t, d = x.shape
+    hd = cfg.head_dim or 64
+    h = d // hd
+    prev, new_last = _token_shift(x, last_x)
+
+    def mix(mu):
+        return x + (prev - x) * mu.astype(x.dtype)
+
+    r = (mix(p["mu_r"]) @ p["wr"].astype(x.dtype)).reshape(b, t, h, hd)
+    k = (mix(p["mu_k"]) @ p["wk"].astype(x.dtype)).reshape(b, t, h, hd)
+    v = (mix(p["mu_v"]) @ p["wv"].astype(x.dtype)).reshape(b, t, h, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"].astype(x.dtype))
+    xw = mix(p["mu_w"]).astype(jnp.float32)
+    dec = p["w0"] + jnp.tanh(xw @ p["wa1"]) @ p["wa2"]
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, hd)          # (0,1)
+    # analysis artifacts force the chunked-parallel form: its unrolled HLO
+    # counts the full recurrence, and it is also the MXU-friendly production
+    # path (validated against the sequential scan in tests)
+    chunk = 256 if analysis_unroll() else 64
+    use_chunked = ((chunked or analysis_unroll()) and t % chunk == 0
+                   and t > chunk and S is None)
+    if use_chunked:
+        o, S_new = wkv_chunked(r, k, v, w, p["u"], chunk=chunk)
+    else:
+        o, S_new = _wkv_with_init(r, k, v, w, p["u"], S)
+    o = o.reshape(b, t, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"], 1e-5) * g
+    return o @ p["wo"].astype(x.dtype), new_last, S_new
+
+
+def _wkv_with_init(r, k, v, w, u, S0):
+    b, t, h, hd = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        return w_t[..., :, None] * S + kv, o
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    S, out = jax.lax.scan(step, S0, xs)
+    return out.transpose(1, 0, 2, 3), S
+
+
+def rwkv_channel_mix(p, x, last_x):
+    prev, new_last = _token_shift(x, last_x)
+    xk = x + (prev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (prev - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    return r * (k @ p["wv"].astype(x.dtype)), new_last

@@ -1,0 +1,569 @@
+"""Unified decoder stack covering the dense / moe / ssm(rwkv) / hybrid / vlm /
+audio families.
+
+Layers are *stacked* (leading L dim on every leaf) and applied with
+``jax.lax.scan`` so the HLO stays one-layer-sized for the 61/96-layer archs.
+Three entry points share the block code:
+
+    forward_train   (B,S) tokens -> (B,S,V) logits           [train / prefill-bench]
+    prefill         also builds the KV/state cache
+    decode_step     one token against the cache               [decode shapes]
+
+``ParallelCtx`` carries mesh info so the MoE block can run its expert-parallel
+shard_map; everything else distributes via GSPMD shardings assigned by
+``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Mesh context handed to blocks that need manual collectives (MoE EP)."""
+
+    mesh: Any = None
+    batch_axes: tuple = ("data",)     # mesh axes the batch dim is sharded over
+    model_axis: Optional[str] = None  # None => mp=1, no shard_map
+    moe_ff_axes: tuple = ()           # decode: 2D expert sharding (§Perf B)
+
+    @property
+    def ep(self) -> bool:
+        return self.mesh is not None and self.model_axis is not None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg, dtype, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, nh * hd, dtype),
+        "wk": L.dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": L.dense_init(ks[3], nh * hd, d, dtype),
+    }
+
+
+def layer_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.rwkv:
+        return rwkv_mod.rwkv_layer_init(key, cfg, dtype)
+    p = {"ln1": jnp.ones((d,), jnp.float32), "ln2": jnp.ones((d,), jnp.float32)}
+    p["attn"] = _attn_init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+        p["beta_attn"] = jnp.ones((d,), jnp.float32)
+        p["beta_ssm"] = jnp.ones((d,), jnp.float32)
+        p["ln_attn_out"] = jnp.ones((d,), jnp.float32)
+        p["ln_ssm_out"] = jnp.ones((d,), jnp.float32)
+    if cfg.encoder_layers:  # whisper decoder: cross attention
+        p["lnx"] = jnp.ones((d,), jnp.float32)
+        p["xattn"] = _attn_init(ks[2], cfg, dtype, cross=True)
+    if cfg.is_moe:
+        p["moe"] = moe_mod.moe_init(ks[3], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[3], d, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def _encoder_layer_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32), "ln2": jnp.ones((d,), jnp.float32),
+        "attn": _attn_init(ks[0], cfg, dtype),
+        "mlp": L.mlp_init(ks[1], d, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def model_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_padded
+    ks = jax.random.split(key, 8)
+    params = {
+        "embed": L.embed_init(ks[0], v, d, dtype),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], d, v, dtype)
+    lkeys = jax.random.split(ks[2], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg, dtype))(lkeys)
+    if cfg.n_prefix_embeds:       # VLM: projector for precomputed patch embeds
+        params["prefix_proj"] = L.dense_init(ks[3], d, d, dtype)
+    if cfg.encoder_layers:        # whisper: encoder over stub frame embeddings
+        ekeys = jax.random.split(ks[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _encoder_layer_init(k, cfg, dtype))(ekeys),
+            "pos_embed": (jax.random.normal(ks[5], (cfg.encoder_seq, d)) * 0.02
+                          ).astype(dtype),
+            "final_norm": jnp.ones((d,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg, batch: int, capacity: int, *, window: int = 0,
+               dtype=jnp.bfloat16):
+    """Decode cache, stacked over layers.  ``window``>0 => ring buffer of that
+    size.  RWKV/SSM carry recurrent state instead of KV."""
+    Lc = cfg.n_layers
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.rwkv:
+        d, hd = cfg.d_model, cfg.head_dim or 64
+        h = d // hd
+        cache["wkv_S"] = jnp.zeros((Lc, batch, h, hd, hd), jnp.float32)
+        cache["tm_x"] = jnp.zeros((Lc, batch, d), dtype)
+        cache["cm_x"] = jnp.zeros((Lc, batch, d), dtype)
+        return cache
+    length = window if window else capacity
+    cache["k"] = jnp.zeros((Lc, batch, length, cfg.n_kv_heads, cfg.head_dim), dtype)
+    cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family == "hybrid":
+        di = cfg.ssm_expand * cfg.d_model
+        cache["ssm_h"] = jnp.zeros((Lc, batch, di, cfg.ssm_state), jnp.float32)
+        cache["ssm_conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, di), dtype)
+    if cfg.encoder_layers:
+        cache["xk"] = jnp.zeros((Lc, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _cache_seq_sharded(cfg, cache_kv, pctx) -> bool:
+    """Mirror of the flash-decode engagement condition (§Perf B.2/B.3)."""
+    if pctx is None or pctx.mesh is None or pctx.model_axis is None:
+        return False
+    clen = cache_kv["k"].shape[1]
+    return (clen % pctx.mesh.shape[pctx.model_axis] == 0 and clen >= 1024
+            and not cfg.attn_logit_softcap)
+
+
+def _batch_div(b, pctx, baxes) -> bool:
+    n = 1
+    for a in baxes:
+        n *= pctx.mesh.shape[a]
+    return n > 1 and b % n == 0
+
+
+def _attn_batch_respec(pctx, cfg, b: int, t: int = 0):
+    """When the head count does not divide the model axis (e.g. smollm's 15
+    heads on 16-way MP), attention cannot be head-sharded — instead of
+    replicating the quadratic attention work on every model shard, reshard
+    around the attention einsums.  Two fallbacks, tried in order:
+
+      1. batch-over-(dp x model): needs B % (dp*mp) == 0 (train_4k);
+      2. sequence-over-model on the QUERY dim only (§Perf iteration A):
+         q and out shard their time dim on the model axis while K/V stay
+         replicated — each shard computes its S/mp query rows against all
+         keys, which is exactly 1/mp of the work and is mask-correct for
+         causal + sliding-window (masks are elementwise on iota positions).
+         Needs T % mp == 0 (prefill_32k and train_4k both qualify).
+
+    Returns (q_spec, kv_spec, out_spec) NamedShardings or (None,)*3.
+    """
+    if pctx is None or pctx.mesh is None or pctx.model_axis is None or not cfg.n_heads:
+        return None, None, None
+    msz = pctx.mesh.shape[pctx.model_axis]
+    if cfg.n_heads % msz == 0:
+        return None, None, None  # head sharding works; GSPMD handles it
+    baxes = tuple(a for a in pctx.batch_axes if a)
+    dp = 1
+    for a in baxes:
+        dp *= pctx.mesh.shape[a]
+    NS = jax.sharding.NamedSharding
+    if b % (dp * msz) == 0:
+        inner = NS(pctx.mesh, P(baxes + (pctx.model_axis,), None, None, None))
+        outer = NS(pctx.mesh, P(baxes or None, None, None, None))
+        return inner, inner, outer
+    if t and t % msz == 0 and t > msz:
+        q_spec = NS(pctx.mesh, P(baxes or None, pctx.model_axis, None, None))
+        outer = NS(pctx.mesh, P(baxes or None, None, None, None))
+        # K/V must be pinned REPLICATED on the model axis: otherwise GSPMD
+        # propagates q's seq-sharding onto them and lowers the KV-chunk
+        # slicing as per-chunk halo collective-permutes (measured: 97
+        # permutes/layer, 29 GB/layer wire — §Perf iteration A.2)
+        return q_spec, outer, outer
+    return None, None, None
+
+
+def _self_attention(p, x, cfg, *, window: int, pos0, cache_kv=None,
+                    cache_len=None, pctx=None):
+    """Self-attention over x (+ optional cache for decode).
+
+    Returns (out, (k_roped, v)) — roped keys for cache insertion.
+    """
+    b, t, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, t, nkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, t, nkv, hd)
+    q_spec, kv_spec, out_spec = _attn_batch_respec(pctx, cfg, b, t)
+    if q_spec is not None and cache_kv is None:
+        q = jax.lax.with_sharding_constraint(q, q_spec)
+        if kv_spec is not None:
+            k = jax.lax.with_sharding_constraint(k, kv_spec)
+            v = jax.lax.with_sharding_constraint(v, kv_spec)
+    positions = pos0 + jnp.arange(t)
+    q = L.apply_rope(q, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
+    k = L.apply_rope(k, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
+    if cache_kv is None:
+        out = L.attention(q, k, v, causal=True, q_start=0, window=window,
+                          softcap=cfg.attn_logit_softcap)
+    elif (pctx is not None and pctx.mesh is not None
+          and pctx.model_axis is not None and t == 1
+          and cache_kv["k"].shape[1] % pctx.mesh.shape[pctx.model_axis] == 0
+          and cache_kv["k"].shape[1] >= 1024
+          and not cfg.attn_logit_softcap):
+        # flash-decode: KV cache sequence-sharded over the model axis
+        # (§Perf iteration B.2) — partial softmax per shard, pmax/psum merge
+        clen = cache_kv["k"].shape[1]
+        slot = jnp.arange(clen)
+        if window:
+            # seq-sharded ring writes at pos % clen (see the insert below):
+            # every written slot except the one about to be overwritten
+            # (holding absolute position pos - clen, outside the window)
+            cvalid = (slot < cache_len) & (slot != cache_len % clen)
+        else:
+            cvalid = slot < cache_len
+        cvalid = jnp.broadcast_to(cvalid, (b, clen))
+        baxes = tuple(a for a in pctx.batch_axes if a)
+        out = L.seq_sharded_decode_attention(
+            q, cache_kv["k"], cache_kv["v"], cvalid, k, v,
+            mesh=pctx.mesh, seq_axis=pctx.model_axis,
+            batch_axes=baxes if _batch_div(b, pctx, baxes) else ())
+        out = out.reshape(b, t, nh * hd)
+        return out @ p["wo"].astype(x.dtype), (k, v)
+    else:
+        k_all = jnp.concatenate([cache_kv["k"], k], axis=1)
+        v_all = jnp.concatenate([cache_kv["v"], v], axis=1)
+        clen = cache_kv["k"].shape[1]
+        slot = jnp.arange(clen + t)
+        if window:
+            # shift-left ring: the newest slots hold the most recent tokens;
+            # the query (at absolute pos cache_len) sees positions in
+            # (pos - window, pos], i.e. at most window-1 cache entries plus
+            # itself — the oldest ring slot is always masked
+            n_valid = jnp.minimum(cache_len, window - 1)
+            valid = (slot >= clen - n_valid)
+        else:
+            # linear buffer: first cache_len slots valid + appended tokens
+            valid = (slot < cache_len) | (slot >= clen)
+        kv_mask = jnp.broadcast_to(valid, (b, clen + t))
+        out = L.attention(q, k_all, v_all, causal=False, kv_mask=kv_mask,
+                          softcap=cfg.attn_logit_softcap,
+                          dense_threshold=max(8192, clen + t + 1))
+    if q_spec is not None and cache_kv is None:
+        out = jax.lax.with_sharding_constraint(out, out_spec)
+    out = out.reshape(b, t, nh * hd)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+def _cross_attention(p, x, enc_kv, cfg):
+    b, t, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, t, nh, hd)
+    out = L.attention(q, enc_kv[0], enc_kv[1], causal=False,
+                      dense_threshold=max(8192, enc_kv[0].shape[1] + 1))
+    return out.reshape(b, t, nh * hd) @ p["wo"].astype(x.dtype)
+
+
+def _enc_kv(p, enc_out, cfg):
+    b, f, d = enc_out.shape
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, f, nkv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, f, nkv, hd)
+    return k, v
+
+
+def block_apply(cfg, p, x, *, mode: str, window: int, pos0, cache=None,
+                enc_out=None, pctx: Optional[ParallelCtx] = None,
+                rwkv_chunked: bool = False, capacity_factor=1.25):
+    """One decoder block.  Returns (x, new_cache (or None), aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    if cfg.rwkv:
+        if mode == "decode":
+            tm_out, tm_x, S = rwkv_mod.rwkv_time_mix(
+                p["tm"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                cache["tm_x"], cache["wkv_S"], cfg)
+            x = x + tm_out
+            cm_out, cm_x = rwkv_mod.rwkv_channel_mix(
+                p["cm"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cache["cm_x"])
+            x = x + cm_out
+            new_cache = {"wkv_S": S, "tm_x": tm_x, "cm_x": cm_x}
+        else:
+            b, d = x.shape[0], x.shape[-1]
+            zero = jnp.zeros((b, d), x.dtype)
+            tm_out, tm_x, S = rwkv_mod.rwkv_time_mix(
+                p["tm"], L.rms_norm(x, p["ln1"], cfg.norm_eps), zero, None, cfg,
+                chunked=rwkv_chunked)
+            x = x + tm_out
+            cm_out, cm_x = rwkv_mod.rwkv_channel_mix(
+                p["cm"], L.rms_norm(x, p["ln2"], cfg.norm_eps), zero)
+            x = x + cm_out
+            if mode == "prefill":
+                new_cache = {"wkv_S": S, "tm_x": tm_x, "cm_x": cm_x}
+        return x, new_cache, aux
+
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        cache_kv = {"k": cache["k"], "v": cache["v"]}
+        attn_out, (k_new, v_new) = _self_attention(
+            p["attn"], h, cfg, window=window, pos0=pos0, cache_kv=cache_kv,
+            cache_len=pos0, pctx=pctx)
+        seq_sharded = _cache_seq_sharded(cfg, cache_kv, pctx)
+        if window and not seq_sharded:
+            kv = L.cache_insert_window(cache_kv, k_new, v_new)
+        elif seq_sharded:
+            # windowed ring caches also take the positional-insert path when
+            # seq-sharded: write at pos % window (ring without the shift)
+            clen = cache_kv["k"].shape[1]
+            wpos = pos0 % clen if window else pos0
+            baxes = tuple(a for a in pctx.batch_axes if a)
+            ck, cv = L.seq_sharded_cache_insert(
+                cache_kv["k"], cache_kv["v"], k_new, v_new, wpos,
+                mesh=pctx.mesh, seq_axis=pctx.model_axis,
+                batch_axes=baxes if _batch_div(x.shape[0], pctx, baxes) else ())
+            kv = {"k": ck, "v": cv}
+        else:
+            kv = L.cache_insert_full(cache_kv, k_new, v_new, pos0)
+        new_cache.update(kv)
+    else:
+        attn_out, (k_new, v_new) = _self_attention(
+            p["attn"], h, cfg, window=window, pos0=pos0, pctx=pctx)
+        if mode == "prefill":
+            if window:
+                w = window
+                s_len = k_new.shape[1]
+                n = min(s_len, w)
+                if _cache_seq_sharded(cfg, {"k": jnp.zeros(
+                        (1, w, 1, 1))}, pctx):
+                    # positional ring layout (slot = pos % w) — matches the
+                    # seq-sharded decode insert (§Perf B.3)
+                    idx = jnp.arange(s_len - n, s_len) % w
+                    ks = jnp.zeros((k_new.shape[0], w) + k_new.shape[2:],
+                                   k_new.dtype).at[:, idx].set(k_new[:, -n:])
+                    vs = jnp.zeros_like(ks).at[:, idx].set(v_new[:, -n:])
+                else:
+                    # shift-left layout (single-device serving engine)
+                    pad = w - n
+                    ks = jnp.pad(k_new[:, -w:],
+                                 ((0, 0), (pad, 0), (0, 0), (0, 0)))
+                    vs = jnp.pad(v_new[:, -w:],
+                                 ((0, 0), (pad, 0), (0, 0), (0, 0)))
+                new_cache.update({"k": ks, "v": vs})
+            else:
+                # per-layer cache slice: (B, capacity, KV, hd)
+                cap = cache["k"].shape[1] if isinstance(cache, dict) else k_new.shape[1]
+                ks = jnp.pad(k_new, ((0, 0), (0, cap - k_new.shape[1]), (0, 0), (0, 0)))
+                vs = jnp.pad(v_new, ((0, 0), (0, cap - v_new.shape[1]), (0, 0), (0, 0)))
+                new_cache.update({"k": ks, "v": vs})
+
+    if cfg.family == "hybrid":
+        ssm_state = None
+        if mode == "decode":
+            ssm_state = {"h": cache["ssm_h"], "conv": cache["ssm_conv"]}
+        ssm_out, ssm_state_new = ssm_mod.ssm_apply(p["ssm"], h, cfg, ssm_state)
+        attn_out = 0.5 * (
+            L.rms_norm(attn_out, p["ln_attn_out"], cfg.norm_eps)
+            * p["beta_attn"].astype(x.dtype)
+            + L.rms_norm(ssm_out, p["ln_ssm_out"], cfg.norm_eps)
+            * p["beta_ssm"].astype(x.dtype))
+        if mode in ("decode", "prefill"):
+            new_cache.update({"ssm_h": ssm_state_new["h"],
+                              "ssm_conv": ssm_state_new["conv"]})
+    x = x + attn_out
+
+    if cfg.encoder_layers:
+        hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+        if mode == "decode":
+            enc_kv = (cache["xk"], cache["xv"])
+            new_cache.update({"xk": cache["xk"], "xv": cache["xv"]})
+        else:
+            enc_kv = _enc_kv(p["xattn"], enc_out, cfg)
+            if mode == "prefill":
+                new_cache.update({"xk": enc_kv[0], "xv": enc_kv[1]})
+        x = x + _cross_attention(p["xattn"], hx, enc_kv, cfg)
+
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        # decode batches are tiny: use the no-drop capacity so cached decoding
+        # is numerically identical to teacher-forced forward
+        cf = None if mode == "decode" else capacity_factor
+        if pctx is not None and pctx.ep:
+            d, e = cfg.d_model, cfg.n_experts
+            ma = pctx.model_axis
+            fa = tuple(pctx.moe_ff_axes)
+            fspec = fa if fa else None
+            # 2D EP replicates the (tiny) decode activations across the ff
+            # axes; otherwise tokens stay batch-sharded over the DP axes
+            bspec = P(None, None, None) if fa else P(pctx.batch_axes, None, None)
+            in_specs = (
+                {"router": P(),
+                 "wi": P(ma, None, fspec), "wg": P(ma, None, fspec),
+                 "wo": P(ma, fspec, None),
+                 **({"shared": {"wi": P(None, ma), "wg": P(None, ma),
+                                "wo": P(ma, None)}} if "shared" in p["moe"] else {})},
+                bspec)
+            fn = functools.partial(moe_mod.moe_ffn, cfg=cfg, model_axis=ma,
+                                   ff_axes=fa, capacity_factor=cf)
+            mlp_out, moe_aux = jax.shard_map(
+                fn, mesh=pctx.mesh, in_specs=in_specs,
+                out_specs=(bspec, P()), check_vma=False)(p["moe"], h2)
+        else:
+            mlp_out, moe_aux = moe_mod.moe_ffn(p["moe"], h2, cfg,
+                                               capacity_factor=cf)
+        aux = aux + cfg.router_aux_loss * moe_aux
+    else:
+        mlp_out = L.mlp_apply(p["mlp"], h2, cfg.mlp_kind)
+    x = x + mlp_out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, frames):
+    """frames: (B, F, d) stub frontend embeddings -> (B, F, d)."""
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None].astype(frames.dtype)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        b, f, d = h.shape
+        nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ lp["attn"]["wq"].astype(h.dtype)).reshape(b, f, nh, hd)
+        k = (h @ lp["attn"]["wk"].astype(h.dtype)).reshape(b, f, nkv, hd)
+        v = (h @ lp["attn"]["wv"].astype(h.dtype)).reshape(b, f, nkv, hd)
+        o = L.attention(q, k, v, causal=False, dense_threshold=max(8192, f + 1))
+        x = x + o.reshape(b, f, nh * hd) @ lp["attn"]["wo"].astype(h.dtype)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h2, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"],
+                        unroll=cfg.encoder_layers if L.analysis_unroll() else 1)
+    return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# top-level entry points
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return x * (cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0)
+
+
+def _head(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab_size:
+        neg = jnp.full((cfg.vocab_padded - cfg.vocab_size,), L.NEG_INF, logits.dtype)
+        bias = jnp.concatenate([jnp.zeros((cfg.vocab_size,), logits.dtype), neg])
+        logits = logits + bias
+    return logits
+
+
+def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
+            pctx: Optional[ParallelCtx] = None, remat: bool = True,
+            rwkv_chunked: bool = False, cache_capacity: int = 0,
+            capacity_factor=1.25):
+    """Main entry.  batch: dict(tokens (B,S) [, prefix (B,P,d), frames (B,F,d)]).
+
+    mode "train": returns (logits, aux).  mode "prefill": returns
+    (logits, cache, aux) with a cache of ``cache_capacity``.
+    """
+    window = cfg.sliding_window if window_override is None else window_override
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    n_prefix = 0
+    if cfg.n_prefix_embeds:
+        pre = batch["prefix"].astype(x.dtype) @ params["prefix_proj"].astype(x.dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        n_prefix = pre.shape[1]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(cfg, params, batch["frames"].astype(x.dtype))
+
+    prefill = mode == "prefill"
+    cache_tmpl = None
+    if prefill:
+        cache_tmpl = make_cache(cfg, tokens.shape[0], cache_capacity or x.shape[1],
+                                window=window, dtype=jnp.dtype(cfg.dtype))
+
+    def body(carry, lp_and_cache):
+        x, aux = carry
+        if prefill:
+            lp, csl = lp_and_cache
+        else:
+            lp, csl = lp_and_cache, None
+        x, c_new, a = block_apply(cfg, lp, x, mode="prefill" if prefill else "train",
+                                  window=window, pos0=0, cache=csl,
+                                  enc_out=enc_out, pctx=pctx,
+                                  rwkv_chunked=rwkv_chunked,
+                                  capacity_factor=capacity_factor)
+        return (x, aux + a), (c_new if prefill else 0)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if prefill:
+        xs = (params["layers"], {k: v for k, v in cache_tmpl.items() if k != "pos"})
+    else:
+        xs = params["layers"]
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                                    unroll=cfg.n_layers if L.analysis_unroll() else 1)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = _head(cfg, params, x)
+    if prefill:
+        caches["pos"] = jnp.asarray(tokens.shape[1] + n_prefix, jnp.int32)
+        return logits, caches, aux
+    return logits, aux
+
+
+def decode_step(cfg, params, cache, batch, *, window_override=None,
+                pctx: Optional[ParallelCtx] = None):
+    """One-token decode.  batch: dict(tokens (B,1) [, ...]).  Returns
+    (logits (B,1,V), new_cache)."""
+    window = cfg.sliding_window if window_override is None else window_override
+    x = _embed(cfg, params, batch["tokens"])
+    pos = cache["pos"]
+
+    def body(x, lp_cache):
+        lp, csl = lp_cache
+        x, c_new, _ = block_apply(cfg, lp, x, mode="decode", window=window,
+                                  pos0=pos, cache=csl, pctx=pctx)
+        return x, c_new
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches),
+                                 unroll=cfg.n_layers if L.analysis_unroll() else 1)
+    logits = _head(cfg, params, x)
+    new_caches["pos"] = pos + 1
+    return logits, new_caches

@@ -1,0 +1,29 @@
+"""Optimizers and LR schedules (optax-like minimal API, pure JAX).
+
+Includes the paper's training setups: momentum-SGD with the linear
+batch-size/LR scaling rule (Goyal et al., used for Inception-V3), exponential
+warmup + step decay (GNMT), and AdamW / Adafactor for the modern archs —
+Adafactor's factored second moment is what lets the 1T-param MoE fit the
+per-device HBM budget (DESIGN.md §4).
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    momentum_sgd,
+    sgd,
+    apply_updates,
+)
+from repro.optim.schedules import (
+    constant_lr,
+    cosine_decay,
+    exp_warmup_step_decay,
+    linear_scaled_lr,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "momentum_sgd", "sgd", "apply_updates",
+    "constant_lr", "cosine_decay", "exp_warmup_step_decay", "linear_scaled_lr",
+    "warmup_cosine",
+]

@@ -1,0 +1,154 @@
+"""Minimal optimizer implementations with a two-function API:
+
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+States are pytrees mirroring params, so they inherit the params'
+NamedShardings under pjit (ZeRO-1 falls out of fsdp param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr: Callable) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(lr: Callable, momentum: float = 0.9,
+                 dtype=jnp.float32) -> Optimizer:
+    """The paper's CNN/LSTM optimizer.  Momentum kept in ``dtype`` (bf16 option
+    halves optimizer memory for the giant archs)."""
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)}
+
+    def update(grads, state, params, step):
+        m = jax.tree.map(lambda m_, g: momentum * m_.astype(jnp.float32)
+                         + g.astype(jnp.float32), state["m"], grads)
+        lr_t = lr(step)
+        upd = jax.tree.map(lambda m_: -lr_t * m_, m)
+        return upd, {"m": jax.tree.map(lambda x: x.astype(dtype), m)}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr_t = lr(step)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018).
+
+    For a (.., r, c) weight, keeps only row/col second-moment accumulators —
+    O(r + c) instead of O(r*c) state, the fit-enabler for kimi-k2 (DESIGN §4).
+    """
+
+    def init(params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"acc": jax.tree.map(z, params,
+                                    is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, acc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                vr = beta * acc["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * acc["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                                 / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], eps))
+                u = g / jnp.maximum(denom, eps)
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                new = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_a = tree.flatten_up_to(state["acc"])
+        outs = [upd(g, a) for g, a in zip(flat_g, flat_a)]
+        updates = tree.unflatten([o[0] for o in outs])
+        acc = tree.unflatten([o[1] for o in outs])
+        return updates, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {
+    "sgd": sgd,
+    "momentum": momentum_sgd,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}

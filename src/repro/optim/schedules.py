@@ -1,0 +1,62 @@
+"""LR schedules, including the paper's exact recipes (§4):
+
+- Inception-V3: initial LR scaled linearly with global batch (Goyal et al.).
+- GNMT: exponential warmup for 200 steps; decay x0.5 every 500 steps starting
+  at step 6000, four decays total.
+- plus warmup-cosine for the modern archs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_scaled_lr(base_lr: float, base_batch: int, global_batch: int,
+                     warmup_steps: int = 500):
+    """Goyal et al. linear scaling rule with gradual warmup."""
+    peak = base_lr * global_batch / base_batch
+
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * (s + 1) / max(warmup_steps, 1)
+        return jnp.minimum(warm, peak)
+
+    return sched
+
+
+def exp_warmup_step_decay(peak_lr: float, warmup_steps: int = 200,
+                          decay_start: int = 6000, decay_interval: int = 500,
+                          decay_factor: float = 0.5, n_decays: int = 4):
+    """The paper's GNMT schedule."""
+
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.exp(jnp.minimum(s / warmup_steps, 1.0) - 1.0) \
+            / jnp.exp(0.0)
+        warm = peak_lr * jnp.exp((jnp.minimum(s, warmup_steps) / warmup_steps - 1.0) * 4.0)
+        n_dec = jnp.clip(jnp.floor((s - decay_start) / decay_interval) + 1,
+                         0, n_decays)
+        return jnp.where(s < warmup_steps, warm,
+                         peak_lr * decay_factor ** n_dec)
+
+    return sched
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (s + 1) / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+    return sched
+
+
+def cosine_decay(peak_lr: float, total_steps: int, final_frac: float = 0.0):
+    return warmup_cosine(peak_lr, 0, total_steps, final_frac)

@@ -1,0 +1,7 @@
+from repro.parallel.plan import ParallelPlan, plan_degrees
+from repro.parallel.pipeline import (pipeline_apply, pipeline_step_speedup,
+                                     stack_to_stages)
+from repro.parallel.sharding import ShardingRules
+
+__all__ = ["ParallelPlan", "plan_degrees", "pipeline_apply",
+           "pipeline_step_speedup", "stack_to_stages", "ShardingRules"]

@@ -1,0 +1,95 @@
+"""GPipe-style pipeline model-parallelism via shard_map + ppermute.
+
+The paper implements MP for GNMT/BigLSTM as pipeline parallelism (§4.4); on
+TPU the idiomatic equivalent streams micro-batches through mesh-axis stages
+with ``jax.lax.ppermute`` (DESIGN.md §3).  ``ParallelPlan(mp_kind="pipeline")``
+selects this runtime; tests prove pipeline == sequential stacking bit-for-bit
+(fp32) and the fig5/table1 benchmarks use its analytic bubble model
+(t_pipe = (n_micro + n_stages - 1) / n_micro / n_stages of sequential).
+
+Schedule: micro-batch m enters stage s at tick m + s; total ticks
+T = n_micro + n_stages - 1; the bubble fraction is (n_stages-1)/T.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(mesh, axis: str, stage_fn: Callable, stage_params, x,
+                   n_micro: int, batch_axes=()):
+    """Run ``x`` through a layer stack partitioned into stages over ``axis``.
+
+    stage_params: pytree with leading dim (n_stages, layers_per_stage, ...).
+    stage_fn(params_one_stage, x) -> y applies one stage's layers.
+    x: (B, ...) with B divisible by n_micro (and by the batch_axes sharding).
+    Returns y with x's shape.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_micro == 0, (b, n_micro)
+    mb = b // n_micro
+    xm = x.reshape((n_micro, mb) + x.shape[1:])
+    bspec = P(*( (batch_axes,) if batch_axes else (None,) ))
+
+    def inner(params_local, xm_local):
+        # params_local: (1, layers_per_stage, ...) — this stage's slice
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        T = n_micro + n_stages - 1
+        right = [(i, i + 1) for i in range(n_stages - 1)]
+        state0 = jnp.zeros_like(xm_local[0])
+        outs0 = jnp.zeros_like(xm_local)
+
+        def tick(carry, t):
+            state, outs = carry
+            inj = xm_local[jnp.clip(t, 0, n_micro - 1)]
+            inp = jnp.where(stage == 0, inj, state)
+            y = stage_fn(params_local, inp)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            write = (stage == n_stages - 1) & (t >= n_stages - 1)
+            outs = outs.at[out_idx].set(jnp.where(write, y, outs[out_idx]))
+            state = jax.lax.ppermute(y, axis, right)
+            return (state, outs), None
+
+        (state, outs), _ = jax.lax.scan(tick, (state0, outs0), jnp.arange(T))
+        # outputs live on the last stage only; replicate across the axis
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    p_specs = jax.tree.map(lambda _: P(axis), stage_params)
+    x_spec = P(None, bspec[0], *([None] * (x.ndim - 1)))
+    out = jax.shard_map(inner, mesh=mesh, in_specs=(p_specs, x_spec),
+                        out_specs=x_spec, check_vma=False)(stage_params, xm)
+    return out.reshape(x.shape)
+
+
+def stack_to_stages(stacked_params, n_stages: int):
+    """(L, ...) stacked layer params -> (n_stages, L / n_stages, ...)."""
+    def re(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return a.reshape((n_stages, L // n_stages) + a.shape[1:])
+
+    return jax.tree.map(re, stacked_params)
+
+
+def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Idle fraction of the GPipe schedule — the analytic SU^M input for
+    pipeline-MP in the planner (per-step speedup = m * (1 - bubble))."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_step_speedup(m: int, n_micro: int,
+                          comm_fraction: float = 0.0) -> float:
+    """SU^M of m-stage pipelining with n_micro micro-batches: perfect split
+    minus bubble minus inter-stage activation transfer overhead."""
+    if m <= 1:
+        return 1.0
+    eff = 1.0 - pipeline_bubble_fraction(n_micro, m)
+    return m * eff / (1.0 + comm_fraction)

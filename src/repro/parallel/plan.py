@@ -1,0 +1,48 @@
+"""ParallelPlan: the executable description of a hybrid DP x MP strategy.
+
+This is the object the paper's planner (repro.core.planner) emits and the
+runtime consumes: which mesh axes carry data parallelism (the paper's N), which
+axis carries model parallelism (the paper's M), and whether parameters /
+optimizer state are additionally sharded over the DP axes (ZeRO-style "fsdp" —
+a beyond-paper addition required to *fit* 2025-scale models; the paper-faithful
+baseline keeps it off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    dp_axes: Tuple[str, ...] = ("data",)   # batch sharded over these (paper's N)
+    model_axis: Optional[str] = "model"    # tensor/expert MP axis (paper's M)
+    fsdp_axes: Tuple[str, ...] = ()        # params/opt additionally sharded here
+    mp_kind: str = "tensor"                # "tensor" | "pipeline"
+    microbatches: int = 1                  # delayed-gradient accumulation (§4.2)
+    remat: bool = True
+
+    def describe(self, mesh) -> str:
+        dp = 1
+        for a in self.dp_axes:
+            dp *= mesh.shape[a]
+        mp = mesh.shape[self.model_axis] if self.model_axis else 1
+        return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP"
+                f"{' +fsdp' if self.fsdp_axes else ''}"
+                f"{f' x{self.microbatches} accum' if self.microbatches > 1 else ''}")
+
+
+def plan_degrees(plan: ParallelPlan, mesh) -> Tuple[int, int]:
+    """(N, M) = (data-parallel ways, model-parallel ways) of plan on mesh."""
+    n = 1
+    for a in plan.dp_axes:
+        n *= mesh.shape[a]
+    m = mesh.shape[plan.model_axis] if plan.model_axis else 1
+    return n, m
+
+
+PAPER_BASELINE = ParallelPlan()                                  # DP x tensor-MP
+PAPER_DP_ONLY = ParallelPlan(model_axis=None)                    # pure DP
+OPTIMIZED = ParallelPlan(fsdp_axes=("data",))                    # + ZeRO-3

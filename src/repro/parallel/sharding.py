@@ -1,0 +1,243 @@
+"""Divisibility-aware sharding-rule engine: param path -> PartitionSpec.
+
+Implements the Megatron-style tensor-MP decomposition per architecture family
+(DESIGN.md §4): attention heads / FFN hidden / experts / vocab on the model
+axis, with automatic fallback to replication whenever a dim is not divisible
+by the axis size (e.g. smollm's 15 heads on a 16-way axis), and optional
+ZeRO-style sharding of the remaining large dim over the DP axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.plan import ParallelPlan
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class ShardingRules:
+    """Assigns PartitionSpecs to a model's param pytree and its inputs."""
+
+    def __init__(self, cfg, mesh, plan: ParallelPlan):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.plan = plan
+        self.ms = plan.model_axis
+        self.msz = _axis_size(mesh, self.ms) if self.ms else 1
+        self.fs = plan.fsdp_axes or None
+        self.fsz = _axis_size(mesh, self.fs) if self.fs else 1
+        self.batch_axes = tuple(plan.dp_axes)
+
+    # -- helpers ----------------------------------------------------------
+    def _m(self, dim: int, head_groups: Optional[int] = None):
+        """model axis if divisible (and head-aligned when head_groups given)."""
+        if not self.ms or self.msz == 1 or dim % self.msz:
+            return None
+        if head_groups is not None and head_groups % self.msz:
+            return None
+        return self.ms
+
+    def _f(self, dim: int):
+        if not self.fs or self.fsz == 1 or dim % self.fsz:
+            return None
+        return self.fs
+
+    def _matmul(self, d_in: int, d_out: int, head_groups=None,
+                row_shard: bool = False):
+        """Spec for a (d_in, d_out) weight.  Column-sharded on the model axis
+        by default (Megatron column-parallel); row_shard => row-parallel
+        (output needs a psum, which GSPMD inserts)."""
+        if row_shard:
+            m = self._m(d_in, head_groups)
+            f = self._f(d_out)
+            return P(m, f)
+        m = self._m(d_out, head_groups)
+        f = self._f(d_in)
+        return P(f, m)
+
+    # -- per-leaf rule ----------------------------------------------------
+    def leaf_spec(self, path: Tuple[str, ...], shape: Tuple[int, ...]):
+        cfg = self.cfg
+        names = [p for p in path]
+        name = names[-1]
+        stacked = "layers" in names  # leading L dim from scan-stacking
+        core = shape[1:] if stacked else shape
+        spec = self._leaf_spec_core(names, name, core)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    def _leaf_spec_core(self, names, name, shape):
+        cfg = self.cfg
+        nd = len(shape)
+        if nd <= 1:
+            if nd == 1 and name in ("D", "dt_bias") and self._m(shape[0]):
+                return P(self.ms)
+            return P()
+        # embeddings: vocab rows on model axis (Megatron vocab-parallel)
+        if name in ("embed", "src_embed", "tgt_embed", "pos_embed"):
+            if name == "pos_embed":
+                return P(None, None)
+            return P(self._m(shape[0]), self._f(shape[1]))
+        if name in ("lm_head", "head", "fc"):
+            return P(self._f(shape[0]), self._m(shape[1]))
+        # MoE expert banks: (E, d, ff) / (E, ff, d) — expert-parallel on model
+        if "moe" in names:
+            if name in ("wi", "wg") and nd == 3:
+                return P(self._m(shape[0]), None, self._f(shape[2]))
+            if name == "wo" and nd == 3:
+                return P(self._m(shape[0]), self._f(shape[1]), None)
+            if name == "router":
+                return P(None, None)
+            if "shared" in names:  # shared experts: plain TP MLP
+                if name in ("wi", "wg"):
+                    return P(self._f(shape[0]), self._m(shape[1]))
+                return P(self._m(shape[0]), self._f(shape[1]))
+        # attention
+        if "attn" in names or "xattn" in names:
+            if name == "wq":
+                return self._matmul(*shape, head_groups=cfg.n_heads)
+            if name in ("wk", "wv"):
+                return self._matmul(*shape, head_groups=cfg.n_kv_heads)
+            if name == "wo":
+                return self._matmul(*shape, head_groups=cfg.n_heads,
+                                    row_shard=True)
+        # rwkv time-mix / channel-mix
+        if "tm" in names:
+            heads = cfg.d_model // (cfg.head_dim or 64)
+            if name in ("wr", "wk", "wv", "wg"):
+                return self._matmul(*shape, head_groups=heads)
+            if name == "wo":
+                return self._matmul(*shape, head_groups=heads, row_shard=True)
+            if name in ("wa1", "wa2"):
+                return P(None, None)
+        if "cm" in names:
+            if name == "wk":
+                return self._matmul(*shape)
+            if name == "wv":
+                return self._matmul(*shape, row_shard=True)
+            if name == "wr":
+                return self._matmul(*shape)
+        # ssm (mamba)
+        if "ssm" in names or name in ("in_proj", "x_proj", "dt_proj",
+                                      "out_proj", "conv_w", "A_log"):
+            if name == "in_proj":
+                return self._matmul(*shape)
+            if name == "conv_w":
+                return P(None, self._m(shape[1]))
+            if name == "x_proj":   # (di, dt_rank + 2 ds): row-parallel
+                return P(self._m(shape[0]), None)
+            if name == "dt_proj":
+                return P(None, self._m(shape[1]))
+            if name == "A_log":
+                return P(self._m(shape[0]), None)
+            if name == "out_proj":
+                return self._matmul(*shape, row_shard=True)
+        # mlp
+        if name in ("wi", "wg"):
+            return self._matmul(*shape)
+        if name == "wo":
+            return self._matmul(*shape, row_shard=True)
+        # lstm cells: column-shard gate projections, row-shard the projection
+        if name in ("wx", "wh"):
+            return P(self._f(shape[0]), self._m(shape[1]))
+        if name == "wp":
+            return self._matmul(*shape, row_shard=True)
+        if name == "w" and nd == 4:  # conv HWIO: shard output channels
+            return P(None, None, None, self._m(shape[3]))
+        if name == "attn_q":
+            return P(self._f(shape[0]), None)
+        return P(*([None] * nd))
+
+    # -- public API --------------------------------------------------------
+    def params_specs(self, params_shape):
+        """pytree of PartitionSpec matching a params shape-pytree."""
+        def walk(path, node):
+            if isinstance(node, dict):
+                return {k: walk(path + (k,), v) for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                t = [walk(path + (str(i),), v) for i, v in enumerate(node)]
+                return type(node)(t)
+            return self.leaf_spec(path, node.shape)
+
+        return walk((), params_shape)
+
+    def params_shardings(self, params_shape):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.params_specs(params_shape),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def batch_specs(self, batch_shape):
+        """Inputs: batch dim over dp axes (when divisible), rest replicated."""
+        bax = self.batch_axes
+        bsz = _axis_size(self.mesh, bax)
+
+        def spec(leaf):
+            if leaf.shape and leaf.shape[0] % bsz == 0 and leaf.shape[0] > 0 and bsz > 1:
+                return P(bax, *([None] * (len(leaf.shape) - 1)))
+            return P(*([None] * len(leaf.shape)))
+
+        return jax.tree.map(spec, batch_shape)
+
+    def cache_specs(self, cache_shape):
+        """Decode caches: (L, B, len, KV, hd) — batch over dp axes when it
+        divides, KV heads over model when they divide; recurrent states shard
+        their channel dim on model."""
+        bax = self.batch_axes
+        bsz = _axis_size(self.mesh, bax)
+        cfg = self.cfg
+
+        def spec(path, leaf):
+            name = path[-1] if path else ""
+            sh = leaf.shape
+            if name == "pos":
+                return P()
+            b_ok = len(sh) > 1 and sh[1] % bsz == 0 and bsz > 1
+            b = bax if b_ok else None
+            if name in ("k", "v", "xk", "xv"):
+                kvm = self._m(sh[3], head_groups=cfg.n_kv_heads)
+                # self-attn caches: sequence-shard over the model axis for the
+                # flash-decode path (§Perf B.2) when kv heads can't shard;
+                # cross-attn (xk/xv, encoder frames) stays head/replicated
+                seq_m = None
+                if (name in ("k", "v") and kvm is None
+                        and sh[2] % self.msz == 0 and sh[2] >= 1024
+                        and self.ms):
+                    seq_m = self.ms
+                return P(None, b, seq_m, kvm, None)
+            if name == "wkv_S":
+                hm = self._m(sh[2], head_groups=sh[2])
+                return P(None, b, hm, None, None)
+            if name in ("tm_x", "cm_x"):
+                return P(None, b, self._m(sh[2]))
+            if name == "ssm_h":
+                return P(None, b, self._m(sh[2]), None)
+            if name == "ssm_conv":
+                return P(None, b, None, self._m(sh[3]))
+            return P(*([None] * len(sh)))
+
+        def walk(path, node):
+            if isinstance(node, dict):
+                return {k: walk(path + (k,), v) for k, v in node.items()}
+            return spec(path, node)
+
+        return walk((), cache_shape)
+
+    def batch_shardings(self, batch_shape):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.batch_specs(batch_shape),
+                            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from repro.serve.engine import GenerationResult, ServeEngine
+
+__all__ = ["GenerationResult", "ServeEngine"]

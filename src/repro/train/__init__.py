@@ -1,0 +1,6 @@
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.steps import (TrainState, init_train_state, make_serve_steps,
+                               make_train_step, shardings_for)
+
+__all__ = ["LoopConfig", "train_loop", "TrainState", "init_train_state",
+           "make_serve_steps", "make_train_step", "shardings_for"]

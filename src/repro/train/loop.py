@@ -1,0 +1,62 @@
+"""Training loop: wiring of data pipeline, sharded train step, metrics, and
+checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.data.pipeline import DataPipeline
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    log_every: int = 20
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    target_loss: Optional[float] = None
+
+
+def train_loop(train_step: Callable, state, pipeline: DataPipeline,
+               cfg: LoopConfig, *, log_fn: Callable[[str], None] = print
+               ) -> Dict:
+    """Runs up to cfg.total_steps (or until target_loss).  Returns summary."""
+    step = 0
+    epoch = 0
+    losses = []
+    t0 = time.time()
+    t_last, s_last = t0, 0
+    history = []
+    while step < cfg.total_steps:
+        for batch in pipeline.epoch(epoch):
+            state, metrics = train_step(state, batch)
+            step += 1
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            history.append(loss)
+            if step % cfg.log_every == 0:
+                now = time.time()
+                rate = (step - s_last) / (now - t_last)
+                t_last, s_last = now, step
+                log_fn(f"step {step:6d} epoch {epoch:3d} "
+                       f"loss {sum(losses)/len(losses):7.4f} "
+                       f"{rate:6.2f} steps/s")
+                losses = []
+            if cfg.ckpt_every and step % cfg.ckpt_every == 0 and cfg.ckpt_dir:
+                save_checkpoint(cfg.ckpt_dir, state, step)
+            if step >= cfg.total_steps:
+                break
+            if cfg.target_loss is not None and loss <= cfg.target_loss:
+                return {"state": state, "steps": step, "epochs": epoch,
+                        "final_loss": loss, "history": history,
+                        "wall_s": time.time() - t0, "converged": True}
+        epoch += 1
+    return {"state": state, "steps": step, "epochs": epoch,
+            "final_loss": history[-1] if history else float("nan"),
+            "history": history, "wall_s": time.time() - t0,
+            "converged": False}

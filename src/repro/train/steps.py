@@ -1,0 +1,203 @@
+"""Step builders: sharded train_step / prefill_step / serve_step factories.
+
+``make_train_step`` builds the jit-able function plus its in/out shardings for
+a (ModelApi, ParallelPlan, mesh); the launcher and the multi-pod dry-run both
+call it.  Gradient accumulation implements the paper's §4.2 delayed-gradient
+emulation of larger global batches: A micro-batches are processed per device
+before one gradient exchange/update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import ModelApi
+from repro.models.transformer import ParallelCtx
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.parallel.plan import ParallelPlan
+from repro.parallel.sharding import ShardingRules
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["params", "opt_state", "step"],
+                   meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: Any
+
+
+def init_train_state(api: ModelApi, optimizer: Optimizer, key) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _make_pctx(mesh, plan: ParallelPlan, batch_shardable: bool,
+               decode: bool = False) -> Optional[ParallelCtx]:
+    if mesh is None or plan.model_axis is None:
+        return None
+    axes = tuple(plan.dp_axes) if batch_shardable else ()
+    # 2D EP (§Perf iteration B): in decode, per-step activations are ~MBs
+    # while the expert bank is ~TBs — replicate tokens across the DP axes and
+    # slice the expert hidden dim over them instead of gathering weights.
+    # Training keeps batch-sharded dispatch (tokens >> weights per step).
+    ff_axes = tuple(plan.dp_axes) if (decode or not batch_shardable) else ()
+    return ParallelCtx(mesh=mesh, batch_axes=axes if axes else (None,),
+                       model_axis=plan.model_axis, moe_ff_axes=ff_axes)
+
+
+def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
+                    plan: ParallelPlan = ParallelPlan(), clip_norm: float = 1.0,
+                    pctx: Optional[ParallelCtx] = None):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn)."""
+    micro = plan.microbatches
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, pctx)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if micro > 1:
+            # delayed gradient update (paper §4.2): split the per-step batch
+            # into `micro` micro-batches, accumulate grads, update once
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(micro, b // micro, *x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(
+                body, zeros, mbatch)
+            grads = jax.tree.map(lambda g: g / micro, grads)
+            loss = losses.mean()
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        updates, opt_state = optimizer.update(grads, state.opt_state, params,
+                                              state.step)
+        params = apply_updates(params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def shardings_for(api: ModelApi, mesh, plan: ParallelPlan, optimizer: Optimizer,
+                  input_specs):
+    """(state_shardings, batch_shardings) for jit in_shardings/out_shardings.
+
+    Derives everything from shape-level eval_shape — no allocation, so this
+    works for the 1T-param configs on the CPU host.
+    """
+    rules = ShardingRules(api.cfg, mesh, plan)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(api.init, key)
+    p_spec = rules.params_specs(params_shape)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                           is_leaf=lambda x: isinstance(x, P))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+
+    # Optimizer state trees mirror the params tree under wrapper keys ("m",
+    # "v", "acc"), possibly with trailing accumulator keys ("vr"/"vc" for
+    # adafactor).  Resolve each opt leaf's spec by PATH: strip leading wrapper
+    # keys until the remainder resolves inside the params spec tree, then
+    # derive factored-accumulator specs from the param's spec.
+    def opt_spec_tree(opt_shape_tree):
+        def resolve(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            for start in range(len(keys)):
+                node = p_spec
+                ok = True
+                consumed = 0
+                for k in keys[start:]:
+                    if isinstance(node, dict) and k in node:
+                        node = node[k]
+                        consumed += 1
+                    elif isinstance(node, (list, tuple)) and str(k).isdigit() \
+                            and int(k) < len(node):
+                        node = node[int(k)]
+                        consumed += 1
+                    else:
+                        break
+                if isinstance(node, P):
+                    rest = keys[start + consumed:]
+                    if not rest:
+                        return node if len(node) == len(leaf.shape) \
+                            else P(*([None] * len(leaf.shape)))
+                    if rest == ["vr"]:      # adafactor row accumulator
+                        return P(*node[:-1]) if len(node) else P()
+                    if rest == ["vc"]:      # adafactor col accumulator
+                        return P(*node[:-2], node[-1]) if len(node) >= 2 else P()
+                    if rest == ["v"]:
+                        return node
+                elif isinstance(node, dict) and not (keys[start + consumed:]):
+                    ok = False
+            return P(*([None] * len(leaf.shape)))
+
+        flat, tree = jax.tree.flatten_with_path(opt_shape_tree)
+        return tree.unflatten([resolve(p, l) for p, l in flat])
+
+    o_spec = opt_spec_tree(opt_shape)
+    o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec,
+                           is_leaf=lambda x: isinstance(x, P))
+    state_shardings = TrainState(params=p_shard, opt_state=o_shard,
+                                 step=NamedSharding(mesh, P()))
+    if "cache" in input_specs:
+        cache_spec = rules.cache_specs(input_specs["cache"])
+        rest = {k: v for k, v in input_specs.items() if k != "cache"}
+        b_spec = rules.batch_specs(rest)
+        b_spec["cache"] = cache_spec
+    else:
+        b_spec = rules.batch_specs(input_specs)
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), b_spec,
+                           is_leaf=lambda x: isinstance(x, P))
+    return state_shardings, b_shard
+
+
+def _lookup(tree, path):
+    node = tree
+    for p in path:
+        key = getattr(p, "key", getattr(p, "idx", None))
+        if isinstance(node, dict):
+            node = node[key]
+        else:
+            node = node[int(key)]
+    return node
+
+
+def make_serve_steps(api: ModelApi, *, pctx=None, window=None):
+    """(prefill_step, decode_step) pure fns for the serving engine/dry-run."""
+
+    def prefill_step(params, batch, capacity):
+        return api.prefill(params, batch, pctx, capacity=capacity, window=window)
+
+    def decode_step(params, batch):
+        cache = batch["cache"]
+        rest = {k: v for k, v in batch.items() if k != "cache"}
+        logits, new_cache = api.decode_fn(params, cache, rest, pctx, window=window)
+        return logits, new_cache
+
+    return prefill_step, decode_step

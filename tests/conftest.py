@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run single-device (the dry-run alone forces 512 host devices)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,83 @@
+"""Config registry: every assigned arch loads with the exact assigned
+dimensions, reduced variants are valid, param counts are in the right range."""
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, PAPER_IDS, get_config
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+    "granite_moe_1b_a400m": (24, 1024, 16, 8, 512, 49155),
+    "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840),
+    "stablelm_12b": (40, 5120, 32, 8, 13824, 100352),
+    "smollm_360m": (32, 960, 15, 5, 2560, 49152),
+    "llama3_2_1b": (16, 2048, 32, 8, 8192, 128256),
+    "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001),
+    "rwkv6_7b": (32, 4096, 0, 0, 14336, 65536),
+    "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+    "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+}
+
+PARAM_RANGES = {  # billions (total)
+    "internvl2_2b": (1.2, 2.5), "granite_moe_1b_a400m": (0.8, 1.8),
+    "kimi_k2_1t_a32b": (900, 1200), "stablelm_12b": (10, 14),
+    "smollm_360m": (0.25, 0.5), "llama3_2_1b": (1.0, 1.8),
+    "hymba_1_5b": (1.1, 2.0), "rwkv6_7b": (6, 9),
+    "nemotron_4_340b": (300, 380), "whisper_large_v3": (1.2, 2.2),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_dims(arch):
+    cfg = get_config(arch)
+    layers, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == layers
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_range(arch):
+    n = get_config(arch).n_params() / 1e9
+    lo, hi = PARAM_RANGES[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi_k2_1t_a32b")
+    active = kimi.n_active_params() / 1e9
+    assert 25 <= active <= 40, active  # "a32b"
+    granite = get_config("granite_moe_1b_a400m")
+    assert 0.3 <= granite.n_active_params() / 1e9 <= 0.6
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + PAPER_IDS)
+def test_reduced_variants(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= 2 or cfg.family == "cnn"
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    if cfg.n_heads:
+        assert cfg.n_heads % cfg.n_kv_heads == 0
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_vocab_padding_divisible():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab_size

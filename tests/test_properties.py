@@ -1,0 +1,118 @@
+"""Seeded property sweeps over the system's invariants (the offline stand-in
+for hypothesis-based tests — see DESIGN.md §7)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.analytical import (TrainingRun, crossover_device_count,
+                                   speedup_dp, speedup_hybrid)
+from repro.core.comm import HardwareModel, ring_all_reduce_time
+from repro.core.dlplacer import DFG, HardwareGraph, OpCost, list_schedule
+from repro.core.planner import HybridPlanner, default_epoch_model, mp_step_speedup
+from repro.core.roofline import model_flops
+from repro.core.stateff import EpochModel, EpochTable
+
+
+def run_with(b_crit, su2=1.3, alpha=2.0):
+    return TrainingRun(name="p", t1=0.1, grad_bytes=1e8, mini_batch=64,
+                       epoch_model=EpochModel(4.0, b_crit, alpha),
+                       dataset_size=10 ** 6, mp_speedup={2: su2},
+                       se_perfect=True)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_crossover_monotone_in_critical_batch(seed):
+    """Earlier statistical-efficiency cliff (smaller b_crit) => crossover at
+    the same or FEWER devices."""
+    rng = np.random.default_rng(seed)
+    b1 = float(rng.uniform(256, 2048))
+    b2 = b1 * float(rng.uniform(2, 8))
+    x1 = crossover_device_count(run_with(b1), m=2, max_devices=2 ** 16)
+    x2 = crossover_device_count(run_with(b2), m=2, max_devices=2 ** 16)
+    if x1 is not None and x2 is not None:
+        assert x1 <= x2
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_hybrid_speedup_monotone_in_su_m(seed):
+    rng = np.random.default_rng(100 + seed)
+    lo, hi = sorted(rng.uniform(1.01, 1.99, size=2))
+    r_lo, r_hi = run_with(1024, su2=float(lo)), run_with(1024, su2=float(hi))
+    for n in (8, 64, 512):
+        assert speedup_hybrid(r_hi, n, 2) >= speedup_hybrid(r_lo, n, 2)
+
+
+def test_epoch_table_interpolation_properties():
+    t = EpochTable.from_dict({256: 4.0, 1024: 6.0, 4096: 20.0})
+    # exact at knots
+    assert t.epochs(256) == 4.0 and t.epochs(4096) == 20.0
+    # monotone between knots
+    xs = np.geomspace(256, 4096, 33)
+    es = [t.epochs(float(x)) for x in xs]
+    assert all(b >= a - 1e-9 for a, b in zip(es, es[1:]))
+    # geometric interpolation stays within bracket
+    assert 4.0 <= t.epochs(512) <= 6.0
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 16, 255])
+def test_ring_all_reduce_bounded_by_2x_bandwidth(n):
+    t = ring_all_reduce_time(1e9, n, 1e11, 0.0)
+    assert t <= 2 * 1e9 / 1e11 + 1e-12
+    assert t >= 1e9 / 1e11 * (n - 1) / n
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_mp_speedup_bounds(arch):
+    """1 <= SU^M <= M for every arch and M (no superlinear MP)."""
+    hw = HardwareModel()
+    cfg = get_config(arch)
+    for m in (2, 4, 8, 16):
+        su = mp_step_speedup(cfg, m, hw)
+        assert 1.0 <= su <= m, (arch, m, su)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_planner_best_dominates_dp_only(arch):
+    """The planner's choice is never worse than DP-only at the same budget."""
+    cfg = get_config(arch)
+    pl = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                       se_perfect=False)
+    for d in (64, 512):
+        best = pl.best(d)
+        dp_only = speedup_hybrid(pl.run, d, 1)
+        assert best.speedup >= dp_only - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_list_schedule_lower_bounds(seed):
+    """Any placement's makespan >= max(critical path, work/devices)."""
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(5, 12))
+    nodes = {f"n{i}": OpCost(float(rng.uniform(1e8, 1e9)), 1e4)
+             for i in range(n)}
+    edges = [(f"n{i}", f"n{j}") for i in range(n) for j in range(i + 1, n)
+             if rng.random() < 0.3]
+    dfg = DFG(nodes, edges)
+    hw = HardwareGraph(n_devices=2)
+    placement = {k: int(rng.integers(0, 2)) for k in nodes}
+    ms = list_schedule(dfg, hw, placement)
+    work = sum(c.flops for c in nodes.values()) / hw.flops_per_s
+    assert ms >= work / 2 - 1e-9
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_model_flops_positive_and_scaling(arch, shape):
+    cfg = get_config(arch)
+    f = model_flops(cfg, INPUT_SHAPES[shape])
+    assert f > 0
+    if shape == "train_4k":
+        # at least 6 * active params * tokens
+        assert f >= 6 * cfg.n_active_params() * 4096 * 256 * 0.99
+
+
+def test_fig3_benchmark_claims():
+    from benchmarks.fig3_example import run
+    assert run()

@@ -1,0 +1,94 @@
+"""Serving engine: sampling modes, capacity handling, multi-arch generation,
+and checkpoint resharding across plan changes."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def _engine(arch="llama3_2_1b", temperature=0.0, seed=0):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.PRNGKey(seed))
+    return cfg, api, ServeEngine(api, params, temperature=temperature)
+
+
+def test_generation_deterministic_greedy():
+    cfg, api, engine = _engine()
+    prompt = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] + 1}
+    a = engine.generate(prompt, max_new_tokens=6, key=jax.random.PRNGKey(1))
+    b = engine.generate(prompt, max_new_tokens=6, key=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+
+
+def test_generation_temperature_varies():
+    cfg, api, engine = _engine(temperature=2.0)
+    prompt = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] + 1}
+    a = engine.generate(prompt, max_new_tokens=8, key=jax.random.PRNGKey(1))
+    b = engine.generate(prompt, max_new_tokens=8, key=jax.random.PRNGKey(2))
+    assert not np.array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+
+
+def test_logprobs_are_valid():
+    cfg, api, engine = _engine()
+    prompt = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] + 1}
+    res = engine.generate(prompt, max_new_tokens=4)
+    lp = np.asarray(res.logprobs)
+    assert (lp <= 1e-5).all() and np.isfinite(lp).all()
+
+
+def test_generated_tokens_within_true_vocab():
+    """Vocab padding must never leak padded ids into generation."""
+    cfg = dataclasses.replace(get_config("hymba_1_5b").reduced(),
+                              vocab_size=1000)  # padded to 1024
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, temperature=1.5)
+    prompt = {"tokens": jnp.arange(6, dtype=jnp.int32)[None] + 1}
+    res = engine.generate(prompt, max_new_tokens=16, key=jax.random.PRNGKey(3))
+    assert int(res.tokens.max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ["rwkv6_7b", "granite_moe_1b_a400m"])
+def test_generate_state_archs(arch):
+    cfg, api, engine = _engine(arch)
+    prompt = {"tokens": jnp.arange(6, dtype=jnp.int32)[None] + 1}
+    res = engine.generate(prompt, max_new_tokens=4)
+    assert res.tokens.shape == (1, 4)
+
+
+def test_checkpoint_restores_into_different_dtype_layout(tmp_path):
+    """Save f32 training params; restore into the serving (bf16) layout by
+    casting — the deployment path."""
+    cfg = get_config("smollm_360m").reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    f = save_checkpoint(str(tmp_path), params, 1)
+    like = jax.tree.map(np.zeros_like, jax.device_get(params))
+    restored = restore_checkpoint(f, like)
+    serving = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
+        restored)
+    api_bf16 = build_model(dataclasses.replace(cfg, param_dtype="bfloat16"),
+                           remat=False)
+    batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None],
+             "labels": jnp.arange(8, dtype=jnp.int32)[None]}
+    loss, _ = api_bf16.loss_fn(serving, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_prefill_capacity_headroom():
+    """Generation beyond the prefill length uses cache headroom correctly."""
+    cfg, api, engine = _engine()
+    prompt = {"tokens": jnp.arange(4, dtype=jnp.int32)[None] + 1}
+    res = engine.generate(prompt, max_new_tokens=12, capacity=32)
+    assert res.tokens.shape == (1, 12)
+    assert np.isfinite(np.asarray(res.logprobs)).all()

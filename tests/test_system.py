@@ -1,0 +1,146 @@
+"""End-to-end behaviour tests: planner -> plan -> training run; serving
+engine correctness; data pipeline; roofline parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import HybridPlanner, default_epoch_model
+from repro.core.roofline import (Roofline, model_flops, parse_collectives)
+from repro.configs.base import INPUT_SHAPES
+from repro.data import DataPipeline, make_lm_dataset
+from repro.models import build_model
+from repro.optim import adamw, warmup_cosine
+from repro.serve.engine import ServeEngine
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.steps import init_train_state, make_train_step
+
+
+def test_planner_emits_executable_plans():
+    cfg = get_config("llama3_2_1b")
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                            se_perfect=False)
+    for devices in (16, 256, 512):
+        choice = planner.best(devices)
+        assert choice.dp * choice.mp * choice.pods == devices
+        assert choice.speedup > 1
+        # mesh shape must multiply out to the budget
+        n = 1
+        for s in choice.mesh_shape:
+            n *= s
+        assert n == devices
+
+
+def test_planner_prefers_mp_at_scale():
+    """Past the statistical-efficiency cliff the planner must pick MP > 1 —
+    the paper's central claim."""
+    cfg = get_config("llama3_2_1b")
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                            se_perfect=False)
+    small = planner.best(8)
+    big = planner.best(2048)
+    assert small.mp <= big.mp
+    assert big.mp > 1
+
+
+def test_planner_crossover_finite():
+    cfg = get_config("llama3_2_1b")
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+    x = planner.crossover(m=2)
+    assert x is not None and x >= 2
+
+
+def test_end_to_end_training_converges_toward_floor():
+    cfg = get_config("llama3_2_1b").reduced()
+    api = build_model(cfg)
+    data = make_lm_dataset(vocab=64, seq_len=32, n_items=1024)
+    opt = adamw(warmup_cosine(5e-3, 5, 60))
+    step = jax.jit(make_train_step(api, opt), donate_argnums=(0,))
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+
+    pipeline = DataPipeline(lambda e: ({"tokens": jnp.asarray(b["tokens"]),
+                                        "labels": jnp.asarray(b["labels"])}
+                                       for b in data.epoch(e, 32)))
+    res = train_loop(step, state, pipeline,
+                     LoopConfig(total_steps=60, log_every=1000),
+                     log_fn=lambda s: None)
+    hist = res["history"]
+    assert np.mean(hist[-5:]) < np.mean(hist[:5]) - 0.5
+
+
+def test_serve_greedy_matches_teacher_forcing():
+    """Greedy generation then teacher-forcing the generated tokens must
+    reproduce the same argmax chain."""
+    cfg = get_config("llama3_2_1b").reduced()
+    api = build_model(cfg, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    engine = ServeEngine(api, params)
+    prompt = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size,
+                                           dtype=jnp.int32)}
+    res = engine.generate(prompt, max_new_tokens=4)
+    # teacher-force: feed prompt + generated, check argmax at each position
+    from repro.models import transformer as tf_mod
+    full = jnp.concatenate([prompt["tokens"], res.tokens], axis=1)
+    logits, _ = tf_mod.forward(cfg, params, {"tokens": full}, mode="train",
+                               remat=False)
+    for i in range(4):
+        pos = 8 + i - 1
+        pred = jnp.argmax(logits[:, pos], -1)
+        np.testing.assert_array_equal(np.asarray(pred),
+                                      np.asarray(res.tokens[:, i]))
+
+
+def test_markov_dataset_properties():
+    d = make_lm_dataset(vocab=32, seq_len=16, n_items=256)
+    assert 0 < d.entropy < np.log(32)
+    b1 = list(d.epoch(0, 64))
+    b2 = list(d.epoch(0, 64))
+    np.testing.assert_array_equal(b1[0]["tokens"], b2[0]["tokens"])  # determinism
+    b3 = list(d.epoch(1, 64))
+    assert not np.array_equal(b1[0]["tokens"], b3[0]["tokens"])  # reshuffled
+    assert b1[0]["tokens"].shape == (64, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1[0]["tokens"][:, 1:], b1[0]["labels"][:, :-1])
+
+
+def test_collective_parser():
+    hlo = """
+  ENTRY %main {
+    %ar = bf16[128,256] all-reduce(bf16[128,256] %x), replica_groups=[16,16]<=[256]
+    %ag = f32[64]{0} all-gather(f32[4] %y), replica_groups={{0,1,2,3}}
+    %cp = bf16[32,32] collective-permute(bf16[32,32] %z)
+  }
+    """
+    st = parse_collectives(hlo, default_group=256)
+    assert st.ops == {"all-reduce": 1, "all-gather": 1, "collective-permute": 1}
+    ar_bytes = 128 * 256 * 2
+    assert st.wire_bytes == pytest.approx(
+        ar_bytes * 2 * 15 / 16 + 64 * 4 * 3 / 4 + 32 * 32 * 2)
+
+
+def test_roofline_terms():
+    r = Roofline(chips=256, hlo_flops_per_chip=197e12,
+                 hlo_bytes_per_chip=819e9,
+                 collective_wire_bytes_per_chip=200e9,
+                 model_flops_total=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(1.0)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.mfu == pytest.approx(0.5)
+
+
+def test_model_flops_kinds():
+    cfg = get_config("llama3_2_1b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr > pf > dc
+    # per-token, train (fwd+bwd, 4k ctx) costs ~2-3.5x prefill (fwd, 32k ctx):
+    # the 3x fwd/bwd factor minus prefill's larger quadratic-attention share
+    tokens_tr = 4096 * 256
+    tokens_pf = 32768 * 32
+    ratio = (tr / tokens_tr) / (pf / tokens_pf)
+    assert 1.5 <= ratio <= 3.5, ratio
