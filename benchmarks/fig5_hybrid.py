@@ -29,6 +29,30 @@ def make_run(net: str) -> TrainingRun:
         se_perfect=True)
 
 
+def planner_report(device_counts=(64, 256, 1024)):
+    """Beyond the paper's 2-way projections: what the unified 3-way planner
+    (DP x tensor-MP x pipeline-MP x micro-batches) actually picks per arch —
+    tensor for the CNN, pipeline for the RNNs, mirroring §4.3/§4.4."""
+    from repro.configs import get_config
+    from repro.core.planner import HybridPlanner, default_epoch_model
+
+    out = {}
+    for net in NETWORKS:
+        cfg = get_config(net)
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+        for d in device_counts:
+            cs = planner.choices(d)
+            if not cs:
+                print(f"fig5,planner,network={net},devices={d},infeasible")
+                continue
+            b = cs[0]
+            out[(net, d)] = b
+            print(f"fig5,planner,network={net},devices={d},kind={b.mp_kind},"
+                  f"dp={b.n_workers},mp={b.mp},micro={b.microbatches},"
+                  f"su={b.speedup:.2f}")
+    return out
+
+
 def run():
     claims = {}
     for net in NETWORKS:
@@ -54,6 +78,7 @@ def run():
     for net, (g, target) in claims.items():
         status = "PASS" if g >= target * 0.97 else "FAIL"
         print(f"fig5,claim_{net}_gain={g:.3f},paper_target={target},{status}")
+    planner_report()
     return claims
 
 

@@ -80,13 +80,23 @@ def run():
     for net, su in rows.items():
         ok = abs(su - PAPER_TABLE1[net]) / PAPER_TABLE1[net] < 0.25
         print(f"table1,claim_{net}_within_25pct={'PASS' if ok else 'FAIL'}")
-    # tensor-MP SU^M for the assigned archs (TPU adaptation)
+    # tensor-MP SU^M for the assigned archs (TPU adaptation), and what kind
+    # of MP the unified planner would pick for each at the pod scale
+    from repro.core.planner import (HybridPlanner, default_epoch_model,
+                                    pipeline_step_speedup_model)
     hw = HardwareModel()
-    for arch in ARCH_IDS:
+    for arch in ARCH_IDS + list(PAPER_TABLE1):
         cfg = get_config(arch)
         su2 = mp_step_speedup(cfg, 2, hw)
         su16 = mp_step_speedup(cfg, 16, hw)
-        print(f"table1,arch={arch},tensor_mp_su2={su2:.3f},su16={su16:.3f}")
+        pipe2 = pipeline_step_speedup_model(cfg, 2, 8, hw, mini_batch=16,
+                                            seq_len=4096) \
+            if cfg.n_layers % 2 == 0 else float("nan")
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+        cs = planner.choices(256)
+        kind = cs[0].mp_kind if cs else "infeasible"
+        print(f"table1,arch={arch},tensor_mp_su2={su2:.3f},su16={su16:.3f},"
+              f"pipe_mp_su2_k8={pipe2:.3f},planner_kind_at_256={kind}")
     return rows
 
 

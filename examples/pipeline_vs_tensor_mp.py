@@ -10,11 +10,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.core.roofline import parse_collectives  # noqa: E402
 from repro.models import build_model  # noqa: E402
+from repro.parallel.jaxcompat import make_mesh, set_mesh  # noqa: E402
 from repro.parallel.pipeline import pipeline_apply, stack_to_stages  # noqa: E402
 from repro.parallel.plan import ParallelPlan  # noqa: E402
 from repro.parallel.sharding import ShardingRules  # noqa: E402
@@ -32,13 +32,13 @@ batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size,
 ref, _ = api.loss_fn(params, batch)
 print(f"single-device loss: {float(ref):.6f}")
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 # --- tensor MP (GSPMD) -------------------------------------------------------
 rules = ShardingRules(cfg, mesh, ParallelPlan())
 p_sh = rules.params_shardings(jax.eval_shape(api.init, key))
 b_sh = rules.batch_shardings(jax.eval_shape(lambda: batch))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     f = jax.jit(lambda p, b: api.loss_fn(p, b)[0], in_shardings=(p_sh, b_sh))
     lowered = f.lower(params, batch)
     tp_loss = f(params, batch)
@@ -70,7 +70,7 @@ def pipeline_loss(params, batch):
     return cross_entropy(logits, batch["labels"], cfg.vocab_size)
 
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g = jax.jit(pipeline_loss)
     lowered_p = g.lower(params, batch)
     pp_loss = g(params, batch)

@@ -9,11 +9,22 @@
 ``TrainingRun`` carries the per-network inputs (step time on one device, grad
 bytes, epoch model, mini-batch size); the functions below evaluate the
 speedup curves the paper plots in Fig. 3/5 and the crossover criterion.
+
+The per-step MP speedup SU^M comes in two flavors, mirroring the paper's two
+MP implementations (§4.3/§4.4):
+
+- **tensor** MP (``mp_speedup``: M -> SU^M) — intra-layer sharding, the
+  Megatron/DLPlacer style the paper measures for Inception-V3;
+- **pipeline** MP (``pipe_speedup``: (M, K) -> SU^M for M stages and K
+  micro-batches) — GPipe-style layer pipelining, the style the paper uses
+  for GNMT and BigLSTM, with SU^M = M * (1 - bubble) / (1 + comm), where
+  bubble = (M-1)/(K+M-1) and comm is the inter-stage activation-transfer
+  time as a fraction of per-micro-batch stage compute.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.comm import HardwareModel, scaling_efficiency
 from repro.core.stateff import EpochModel
@@ -29,14 +40,20 @@ class TrainingRun:
     mini_batch: int                # per-worker batch (constant, paper §3.1)
     epoch_model: EpochModel
     dataset_size: int              # items per epoch
-    mp_speedup: Dict[int, float]   # M -> SU^M (paper Table 1 / DLPlacer)
+    mp_speedup: Dict[int, float]   # M -> tensor-MP SU^M (Table 1 / DLPlacer)
     hw: HardwareModel = HardwareModel()
     se_perfect: bool = True        # paper's conservative SE_N = 1
+    # (M stages, K micro-batches) -> pipeline-MP SU^M (GPipe bubble model)
+    pipe_speedup: Dict[Tuple[int, int], float] = \
+        dataclasses.field(default_factory=dict)
 
 
-def se(run: TrainingRun, n: int, *, overlap: float = 0.0) -> float:
-    """Scaling efficiency SE_N of N-way DP."""
-    return scaling_efficiency(run.grad_bytes, run.t1, n, run.hw,
+def se(run: TrainingRun, n: int, *, overlap: float = 0.0,
+       grad_scale: float = 1.0) -> float:
+    """Scaling efficiency SE_N of N-way DP.  ``grad_scale`` shrinks the
+    gradient exchange for hybrid points (each M-way-MP worker owns — and
+    all-reduces — only 1/M of the parameters)."""
+    return scaling_efficiency(run.grad_bytes * grad_scale, run.t1, n, run.hw,
                               overlap=overlap,
                               assume_perfect=run.se_perfect)
 
@@ -58,7 +75,19 @@ def speedup_dp(run: TrainingRun, n: int) -> float:
 def speedup_hybrid(run: TrainingRun, n_workers: int, m: int) -> float:
     """Eq. 5: N-way DP of M-way-MP workers, M*N devices total."""
     su_m = run.mp_speedup.get(m, 0.0) if m > 1 else 1.0
-    return su_m * se(run, n_workers) * n_workers * epochs_ratio(run, n_workers)
+    return (su_m * se(run, n_workers, grad_scale=1.0 / max(m, 1))
+            * n_workers * epochs_ratio(run, n_workers))
+
+
+def speedup_pipeline(run: TrainingRun, n_workers: int, m: int,
+                     n_micro: int) -> float:
+    """Eq. 5 with pipeline-MP workers: N-way DP of M-stage pipelines fed with
+    ``n_micro`` micro-batches each, M*N devices total."""
+    if m <= 1:
+        return speedup_dp(run, n_workers)
+    su_m = run.pipe_speedup.get((m, n_micro), 0.0)
+    return (su_m * se(run, n_workers, grad_scale=1.0 / m)
+            * n_workers * epochs_ratio(run, n_workers))
 
 
 def hybrid_wins(run: TrainingRun, n: int, m: int) -> bool:
@@ -99,7 +128,7 @@ def best_strategy(run: TrainingRun, total_devices: int) -> Dict:
 def convergence_time(run: TrainingRun, n_workers: int, m: int = 1) -> float:
     """Eq. 1 evaluated for a hybrid configuration, in seconds."""
     su_m = run.mp_speedup.get(m, 1.0) if m > 1 else 1.0
-    t = run.t1 / (se(run, n_workers) * su_m)
+    t = run.t1 / (se(run, n_workers, grad_scale=1.0 / max(m, 1)) * su_m)
     global_batch = n_workers * run.mini_batch
     s = run.dataset_size / global_batch
     e = run.epoch_model.epochs(global_batch)

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.roofline import DCI_BW, ICI_LINKS, LINK_BW, PEAK_FLOPS
+from repro.core.roofline import (DCI_BW, HBM_PER_CHIP, ICI_LINKS, LINK_BW,
+                                 PEAK_FLOPS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +30,7 @@ class HardwareModel:
     dci_latency: float = 10e-6
     chips_per_pod: int = 256
     mfu: float = 0.45                     # achievable fraction of peak in T_1
+    hbm_bytes: float = HBM_PER_CHIP      # per-device memory budget
 
 
 def ring_all_reduce_time(bytes_: float, n: int, bw: float,
@@ -36,6 +38,17 @@ def ring_all_reduce_time(bytes_: float, n: int, bw: float,
     if n <= 1:
         return 0.0
     return 2.0 * (n - 1) / n * bytes_ / bw + (n - 1) * latency
+
+
+def p2p_transfer_time(bytes_: float, hw: HardwareModel, *,
+                      inter_pod: bool = False) -> float:
+    """Point-to-point neighbor transfer (``ppermute`` between adjacent
+    pipeline stages): one hop over a single direction of the torus."""
+    if inter_pod:
+        return bytes_ / hw.dci_bw + hw.dci_latency
+    # a stage boundary uses the links toward one neighbor, not the full torus
+    per_hop_bw = hw.ici_bw / ICI_LINKS
+    return bytes_ / per_hop_bw + hw.ici_latency
 
 
 def hierarchical_all_reduce_time(bytes_: float, n: int, hw: HardwareModel,

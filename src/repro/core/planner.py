@@ -1,12 +1,37 @@
-"""HybridPlanner — the paper's contribution as a first-class feature.
+"""HybridPlanner — the paper's strategy search as a first-class feature.
 
 Given an architecture config, a device budget, and hardware constants, the
-planner (a) builds a per-step cost model from the arch's FLOPs/bytes,
-(b) derives SE_N from the ring-all-reduce model, (c) takes E(B) from measured
-curves or the fitted inflation model, and (d) evaluates Eq. 4 vs Eq. 5 over
-every factorization (pods, N, M) of the budget, returning the arg-max as an
-executable ``ParallelPlan`` + mesh shape.  ``launch/train.py --parallel auto``
-calls this; explicit ``--parallel dp=16,mp=16`` overrides it.
+planner runs a unified **3-way search** over every factorization of the
+budget into
+
+    total = pods x N (data parallel) x M (model parallel),
+
+where the M-way model parallelism is either **tensor-MP** (intra-layer
+sharding on the ICI torus, the paper's §4.3 / DLPlacer style) or
+**pipeline-MP** (GPipe-style layer pipelining with K micro-batches, the
+paper's §4.4 implementation for GNMT and BigLSTM).  For each point it
+
+(a) builds a per-step cost model from the arch's FLOPs/bytes:
+    tensor SU^M from the Megatron all-reduce pattern, pipeline SU^M from the
+    analytic bubble fraction (M-1)/(K+M-1) plus the inter-stage ``ppermute``
+    activation-transfer time;
+(b) derives SE_N from the (hierarchical) ring-all-reduce model, with the
+    gradient exchange scaled by 1/M because each MP worker owns 1/M of the
+    parameters;
+(c) takes E(B) from measured curves or the fitted inflation model;
+(d) applies a per-device **memory-feasibility filter** — f32 master params +
+    optimizer state + gradients + remat boundary activations, ZeRO/fsdp-aware:
+    a point that only fits with params/opt sharded over DP is emitted with
+    ``fsdp_axes`` set, and a point that does not fit even then is pruned
+    rather than ranked;
+(e) evaluates Eq. 4 vs Eq. 5 over the surviving points and returns them
+    best-first, each as an executable ``ParallelPlan`` (tensor plans with
+    ``model_axis``, pipeline plans additionally with ``mp_kind="pipeline"``
+    and ``microbatches=K``) + mesh shape.
+
+``launch/train.py --parallel auto`` calls this and actually runs the winning
+plan (pipeline plans go through ``parallel.pipeline.pipeline_apply``);
+explicit ``--parallel dp=16,mp=16`` / ``--parallel pipe=4,micro=8`` overrides.
 """
 from __future__ import annotations
 
@@ -15,27 +40,37 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.analytical import TrainingRun, speedup_hybrid
-from repro.core.comm import HardwareModel, hierarchical_all_reduce_time
+from repro.core.analytical import (TrainingRun, speedup_dp, speedup_hybrid,
+                                   speedup_pipeline)
+from repro.core.comm import (HardwareModel, hierarchical_all_reduce_time,
+                             p2p_transfer_time)
 from repro.core.stateff import EpochModel, fit_epoch_model
+from repro.parallel.pipeline import pipeline_step_speedup
 from repro.parallel.plan import ParallelPlan
 
 
 @dataclasses.dataclass(frozen=True)
 class PlannerChoice:
     pods: int
-    dp: int
+    dp: int                        # per-pod DP degree (N = pods * dp)
     mp: int
+    mp_kind: str                   # "none" | "tensor" | "pipeline"
+    microbatches: int              # pipeline micro-batches K (1 otherwise)
     speedup: float                 # projected SU over a single device (Eq. 5)
     su_m: float                    # per-step MP speedup used
     se_n: float
     epochs_ratio: float
+    mem_bytes: float               # projected per-device working set
     mesh_shape: Tuple[int, ...]
     plan: ParallelPlan
 
+    @property
+    def n_workers(self) -> int:
+        return self.pods * self.dp
+
 
 def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel) -> float:
-    """SU^M for tensor-MP on the ICI torus: compute scales 1/m, plus the
+    """Tensor-MP SU^M on the ICI torus: compute scales 1/m, plus the
     per-layer all-reduce of the (b, s, d) activations (2 per layer fwd, 2 bwd,
     Megatron pattern).  Uses bytes/FLOP analytics per arch family — the TPU
     analogue of the paper's measured Table 1 / DLPlacer estimates."""
@@ -52,6 +87,44 @@ def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel) -> float:
     return (t_layer) / (t_layer / m + t_ar)
 
 
+def pipeline_step_speedup_model(cfg: ModelConfig, m: int, n_micro: int,
+                                hw: HardwareModel, *, mini_batch: int,
+                                seq_len: int) -> float:
+    """Pipeline-MP SU^M for an m-stage GPipe schedule with ``n_micro``
+    micro-batches: bubble fraction (m-1)/(n_micro+m-1) plus the inter-stage
+    ``ppermute`` activation transfer (one (b/K, s, d) tensor forward and its
+    gradient backward per boundary per micro-batch)."""
+    if m <= 1:
+        return 1.0
+    tokens = mini_batch * seq_len
+    t_step = 6.0 * cfg.n_active_params() * tokens / (hw.peak_flops * hw.mfu)
+    t_stage_micro = t_step / (m * n_micro)
+    act_bytes = tokens / n_micro * cfg.d_model * 2   # bf16 boundary activation
+    t_xfer = 2.0 * p2p_transfer_time(act_bytes, hw)  # fwd act + bwd grad
+    comm_fraction = t_xfer / max(t_stage_micro, 1e-30)
+    return pipeline_step_speedup(m, n_micro, comm_fraction)
+
+
+def pipeline_stage_candidates(cfg: ModelConfig,
+                              mp_candidates: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Stage counts that evenly partition the arch's layer stack(s)."""
+    ok = []
+    for m in mp_candidates:
+        if m <= 1 or m > cfg.n_layers or cfg.n_layers % m:
+            continue
+        if cfg.encoder_layers and cfg.encoder_layers % m:
+            continue
+        ok.append(m)
+    return tuple(ok)
+
+
+def tensor_mp_supported(cfg: ModelConfig) -> bool:
+    """The paper implements MP for the RNN models (GNMT, BigLSTM) as
+    pipeline parallelism only (§4.4); tensor-MP factorizations are searched
+    for the other families."""
+    return cfg.family != "rnn"
+
+
 def grad_bytes(cfg: ModelConfig) -> float:
     return 4.0 * cfg.n_params()          # f32 gradients, paper-style sync-SGD
 
@@ -61,15 +134,52 @@ def step_time_single(cfg: ModelConfig, mini_batch: int, seq: int,
     return 6.0 * cfg.n_active_params() * mini_batch * seq / (hw.peak_flops * hw.mfu)
 
 
+def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
+                         mp_kind: str = "tensor", fsdp: int = 1,
+                         mini_batch: int, seq_len: int,
+                         opt_bytes_per_param: float = 8.0,
+                         remat: bool = True) -> float:
+    """Projected per-device working set of one training step.
+
+    f32 master params + optimizer state shard over (mp x fsdp); gradients
+    shard over mp, and over fsdp too when it is on (ZeRO-2: grads are
+    reduce-scattered, never fully materialized per rank); boundary
+    activations kept by remat shard over the stages for pipeline-MP and over
+    the model axis for tensor-MP.
+    """
+    p = float(cfg.n_params())
+    shard = float(max(mp, 1) * max(fsdp, 1))
+    state = (4.0 + opt_bytes_per_param) * p / shard
+    grads = 4.0 * p / shard
+    tokens = float(mini_batch) * float(seq_len)
+    boundary = tokens * cfg.d_model * 2.0            # one bf16 (b, s, d)
+    keep_per_layer = 1.0 if remat else 8.0           # remat keeps boundaries
+    act = keep_per_layer * cfg.n_layers * boundary / max(mp, 1)
+    if mp_kind == "pipeline":
+        act += 2.0 * boundary                        # in-flight micro buffers
+    return state + grads + act
+
+
+def default_opt_bytes_per_param(cfg: ModelConfig) -> float:
+    """Adam (m + v, f32) for everything that fits; the giant archs train with
+    factored adafactor state (see launch/dryrun.ADAFACTOR_ARCHS)."""
+    return 1.0 if cfg.n_params() > 1e11 else 8.0
+
+
 class HybridPlanner:
-    """Evaluates every (pods, dp, mp) factorization of the device budget."""
+    """Unified 3-way search over every (pods, N, M, kind, K) point of the
+    device budget: DP-only, N-way DP x M-way tensor-MP, and N-way DP x
+    M-stage pipeline-MP with K micro-batches."""
 
     def __init__(self, cfg: ModelConfig, *, epoch_model: EpochModel,
                  mini_batch: int = 16, seq_len: int = 4096,
                  dataset_tokens: int = 2 ** 33,
                  hw: HardwareModel = HardwareModel(),
                  se_perfect: bool = False,
-                 mp_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)):
+                 mp_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+                 micro_candidates: Tuple[int, ...] = (2, 4, 8),
+                 remat: bool = True,
+                 opt_bytes_per_param: Optional[float] = None):
         self.cfg = cfg
         self.hw = hw
         self.epoch_model = epoch_model
@@ -77,46 +187,114 @@ class HybridPlanner:
         self.seq_len = seq_len
         self.se_perfect = se_perfect
         self.mp_candidates = mp_candidates
+        self.micro_candidates = tuple(
+            k for k in micro_candidates if k > 1 and mini_batch % k == 0)
+        self.remat = remat
+        self.opt_bytes_per_param = (default_opt_bytes_per_param(cfg)
+                                    if opt_bytes_per_param is None
+                                    else opt_bytes_per_param)
+        self.pipe_candidates = pipeline_stage_candidates(cfg, mp_candidates)
         t1 = step_time_single(cfg, mini_batch, seq_len, hw)
+        tensor_ms = (tuple(m for m in mp_candidates if m > 1)
+                     if tensor_mp_supported(cfg) else ())
         self.run = TrainingRun(
             name=cfg.name, t1=t1, grad_bytes=grad_bytes(cfg),
             mini_batch=mini_batch,
             epoch_model=epoch_model,
             dataset_size=dataset_tokens // seq_len,
-            mp_speedup={m: mp_step_speedup(cfg, m, hw)
-                        for m in mp_candidates if m > 1},
-            hw=hw, se_perfect=se_perfect)
+            mp_speedup={m: mp_step_speedup(cfg, m, hw) for m in tensor_ms},
+            hw=hw, se_perfect=se_perfect,
+            pipe_speedup={(m, k): pipeline_step_speedup_model(
+                              cfg, m, k, hw, mini_batch=mini_batch,
+                              seq_len=seq_len)
+                          for m in self.pipe_candidates
+                          for k in self.micro_candidates})
+
+    # ---- search ------------------------------------------------------------
 
     def choices(self, total_devices: int) -> List[PlannerChoice]:
-        out = []
+        """All memory-feasible strategy points for the budget, best first."""
+        out: List[PlannerChoice] = []
         for m in self.mp_candidates:
             if total_devices % m:
                 continue
             n = total_devices // m
+            kinds: List[Tuple[str, int]] = []
+            if m == 1:
+                kinds.append(("none", 1))
+            else:
+                if m in self.run.mp_speedup:
+                    kinds.append(("tensor", 1))
+                if m in self.pipe_candidates:
+                    kinds.extend(("pipeline", k) for k in self.micro_candidates)
+            for kind, k in kinds:
+                choice = self._evaluate(total_devices, n, m, kind, k)
+                if choice is not None:
+                    out.append(choice)
+        # deterministic order: best speedup first, then smaller MP, then the
+        # cheaper-to-run kind, then fewer micro-batches
+        return sorted(out, key=lambda c: (-c.speedup, c.mp, c.mp_kind,
+                                          c.microbatches))
+
+    def _evaluate(self, total: int, n: int, m: int, kind: str,
+                  n_micro: int) -> Optional[PlannerChoice]:
+        mem_kind = kind if kind == "pipeline" else "tensor"
+        mem = per_device_mem_bytes(
+            self.cfg, mp=m, mp_kind=mem_kind, fsdp=1,
+            mini_batch=self.mini_batch, seq_len=self.seq_len,
+            opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat)
+        fsdp = False
+        if mem > self.hw.hbm_bytes and n > 1:
+            mem = per_device_mem_bytes(
+                self.cfg, mp=m, mp_kind=mem_kind, fsdp=n,
+                mini_batch=self.mini_batch, seq_len=self.seq_len,
+                opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat)
+            fsdp = True
+        if mem > self.hw.hbm_bytes:
+            return None                           # pruned: does not fit
+        if kind == "pipeline":
+            su = speedup_pipeline(self.run, n, m, n_micro)
+            su_m = self.run.pipe_speedup.get((m, n_micro), 0.0)
+        elif kind == "tensor":
             su = speedup_hybrid(self.run, n, m)
-            pods = max(1, total_devices // self.hw.chips_per_pod)
-            dp_in_pod = n // pods if n % max(pods, 1) == 0 else n
-            se_n = (1.0 if self.se_perfect else
-                    self._se(n))
-            out.append(PlannerChoice(
-                pods=pods, dp=n // pods if n % pods == 0 else n, mp=m,
-                speedup=su,
-                su_m=self.run.mp_speedup.get(m, 1.0) if m > 1 else 1.0,
-                se_n=se_n,
-                epochs_ratio=self._eratio(n),
-                mesh_shape=((pods, n // pods, m) if pods > 1 else (n, m)),
-                plan=ParallelPlan(
-                    dp_axes=("pod", "data") if pods > 1 else ("data",),
-                    model_axis="model" if m > 1 else None),
-            ))
-        return sorted(out, key=lambda c: -c.speedup)
+            su_m = self.run.mp_speedup.get(m, 1.0)
+        else:
+            su = speedup_dp(self.run, n)
+            su_m = 1.0
+        pods = self._pods(total, n)
+        dp_axes = ("pod", "data") if pods > 1 else ("data",)
+        plan = ParallelPlan(
+            dp_axes=dp_axes,
+            model_axis="model" if m > 1 else None,
+            fsdp_axes=dp_axes if fsdp else (),
+            mp_kind="pipeline" if kind == "pipeline" else "tensor",
+            microbatches=n_micro if kind == "pipeline" else 1,
+            remat=self.remat)
+        mesh_shape = (pods, n // pods, m) if pods > 1 else (n, m)
+        return PlannerChoice(
+            pods=pods, dp=n // pods, mp=m, mp_kind=kind,
+            microbatches=n_micro if kind == "pipeline" else 1,
+            speedup=su, su_m=su_m, se_n=self._se(n, m),
+            epochs_ratio=self._eratio(n), mem_bytes=mem,
+            mesh_shape=mesh_shape, plan=plan)
+
+    def _pods(self, total: int, n: int) -> int:
+        pods = max(1, total // self.hw.chips_per_pod)
+        return pods if (total % self.hw.chips_per_pod == 0
+                        and n % pods == 0) else 1
 
     def best(self, total_devices: int) -> PlannerChoice:
-        return self.choices(total_devices)[0]
+        cs = self.choices(total_devices)
+        if not cs:
+            raise ValueError(
+                f"{self.cfg.name}: no memory-feasible strategy for "
+                f"{total_devices} devices ({self.hw.hbm_bytes / 2**30:.0f} "
+                f"GiB/device)")
+        return cs[0]
 
-    def _se(self, n: int) -> float:
+    def _se(self, n: int, m: int = 1) -> float:
         from repro.core.analytical import se
-        return se(self.run, n)
+        return se(self.run, n, grad_scale=1.0 / max(m, 1))
 
     def _eratio(self, n: int) -> float:
         from repro.core.analytical import epochs_ratio

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.core import roofline as rl
 from repro.launch.mesh import make_production_mesh
+from repro.parallel.jaxcompat import cost_analysis, set_mesh
 from repro.models.api import build_model, make_input_specs
 from repro.optim import adafactor, adamw, constant_lr
 from repro.parallel.plan import ParallelPlan
@@ -43,13 +44,18 @@ from repro.train.steps import (TrainState, _make_pctx, make_train_step,
 ADAFACTOR_ARCHS = {"kimi_k2_1t_a32b", "nemotron_4_340b"}
 
 
-def make_plan(arch: str, mesh, optimized: bool) -> ParallelPlan:
+def make_plan(arch: str, mesh, plan_name: str) -> ParallelPlan:
     multi = "pod" in mesh.axis_names
     dp_axes = ("pod", "data") if multi else ("data",)
-    fsdp = dp_axes if (optimized or arch in ADAFACTOR_ARCHS) else ()
+    fsdp = dp_axes if (plan_name == "optimized" or arch in ADAFACTOR_ARCHS) else ()
     # the giant archs need params sharded over DP to fit at all — that is the
     # ZeRO-3 "fsdp" addition; paper-faithful baseline for the rest keeps
     # params replicated across DP (sharded over model only)
+    if plan_name == "pipeline":
+        # model axis carries GPipe stages instead of tensor shards (§4.4)
+        return ParallelPlan(dp_axes=dp_axes, model_axis="model",
+                            mp_kind="pipeline", microbatches=4,
+                            fsdp_axes=tuple(fsdp))
     return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp))
 
 
@@ -148,21 +154,25 @@ def _unrolled_variant(cfg, n_layers: int):
 
 
 def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
-                  optimized: bool = False, skip_analysis: bool = False,
+                  plan_name: str = "baseline", skip_analysis: bool = False,
                   unroll_analysis: bool = True):
     """Run the dry-run for one (arch, shape, mesh) and return the record."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    plan = make_plan(arch, mesh, optimized)
+    plan = make_plan(arch, mesh, plan_name)
+    if plan.is_pipeline:
+        # the 1-/2-layer unroll artifacts cannot be partitioned into the
+        # 16-stage pipeline; per-layer cost deltas are tensor-plan-only
+        skip_analysis = True
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-           "plan": "optimized" if optimized else "baseline",
+           "plan": plan_name,
            "plan_detail": plan.describe(mesh)}
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted, args = build_step(cfg, shape, mesh, plan, unroll=False)
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
@@ -178,7 +188,7 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
         "hbm_per_chip": rl.HBM_PER_CHIP,
     }
     rec["fits"] = rec["memory"]["peak_bytes"] <= rl.HBM_PER_CHIP
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     rec["real_cost"] = {"flops": ca.get("flops", 0.0),
                         "bytes": ca.get("bytes accessed", 0.0)}
     coll_real = rl.parse_collectives(compiled.as_text(), default_group=chips)
@@ -189,11 +199,11 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
         costs = {}
         for nl in (1, 2):
             cfg_n = _unrolled_variant(cfg, nl)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 j, a = build_step(cfg_n, shape, mesh, plan, unroll=unroll_analysis)
                 low = j.lower(*a)
                 comp = low.compile()
-            c = comp.cost_analysis() or {}
+            c = cost_analysis(comp)
             coll = rl.parse_collectives(comp.as_text(), default_group=chips)
             costs[nl] = {"flops": c.get("flops", 0.0),
                          "bytes": c.get("bytes accessed", 0.0),
@@ -232,7 +242,8 @@ def main():
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--plan", default="baseline", choices=["baseline", "optimized"])
+    ap.add_argument("--plan", default="baseline",
+                    choices=["baseline", "optimized", "pipeline"])
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-analysis", action="store_true")
     args = ap.parse_args()
@@ -246,6 +257,14 @@ def main():
     for arch in archs:
         for shape in shapes:
             for multi in meshes:
+                if args.plan == "pipeline":
+                    # pipeline plans: train-mode only, and the 16-way model
+                    # axis must evenly partition the arch's layer stack
+                    from repro.models.api import pipeline_applicable
+                    if (INPUT_SHAPES[shape].kind != "train"
+                            or not pipeline_applicable(get_config(arch), 16)):
+                        print(f"[skip] {arch}__{shape} (pipeline n/a)")
+                        continue
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}__{args.plan}"
                 out_path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(out_path):
@@ -256,7 +275,7 @@ def main():
                 try:
                     # analysis artifacts only needed on the single-pod mesh
                     rec = analyze_combo(arch, shape, multi_pod=multi,
-                                        optimized=args.plan == "optimized",
+                                        plan_name=args.plan,
                                         skip_analysis=args.skip_analysis or multi)
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)

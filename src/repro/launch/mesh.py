@@ -1,12 +1,13 @@
 """Production mesh builders.
 
 Functions, not module-level constants — importing this module never touches
-jax device state (the dry-run sets XLA_FLAGS before any jax init).
+jax device state (the dry-run sets XLA_FLAGS before any jax init).  Mesh
+construction goes through ``parallel.jaxcompat`` so both old and new jax
+releases work.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.parallel.jaxcompat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,20 +16,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     intra-pod (DESIGN.md §5)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(dp: int, mp: int, pods: int = 1):
     """Arbitrary hybrid mesh: the planner's (pod, N, M) factorization."""
     if pods > 1:
-        return jax.make_mesh((pods, dp, mp), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((dp, mp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pods, dp, mp), ("pod", "data", "model"))
+    return _make_mesh((dp, mp), ("data", "model"))
 
 
 def make_host_mesh():
     """1-device mesh for CPU tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

@@ -2,47 +2,81 @@
 
     python -m repro.launch.train --arch llama3_2_1b --steps 200 \
         --parallel auto --devices 256
+    python -m repro.launch.train --arch biglstm --parallel auto --reduced
     python -m repro.launch.train --arch smollm_360m --parallel dp=2,mp=2 \
         --reduced --steps 100
+    python -m repro.launch.train --arch biglstm --parallel pipe=2,micro=4 \
+        --reduced
 
-``--parallel auto`` invokes the paper's HybridPlanner (Eq. 6 crossover logic)
-to factor the device budget into DP x MP; explicit dp=/mp= overrides.  On this
-CPU container use ``--reduced`` (small configs, 1-device mesh) — the full mesh
-path is exercised by launch/dryrun.py.
+``--parallel auto`` invokes the paper's HybridPlanner — the 3-way search over
+DP x tensor-MP x pipeline-MP factorizations of the device budget (``--devices``,
+default 256) — and *executes* the winning plan: pipeline plans run through
+``parallel.pipeline.pipeline_apply`` on a mesh whose model axis carries the
+stages (on CPU the launcher forces that many host devices before jax
+initializes).  Explicit ``dp=/mp=/accum=`` or ``pipe=/micro=`` specs override
+the search.  ``--reduced`` shrinks the arch (2 layers, small dims) for the
+CPU container.
 """
 from __future__ import annotations
 
 import argparse
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import dataclasses
+import os
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.core.planner import HybridPlanner, default_epoch_model
-from repro.data import DataPipeline, make_lm_dataset
-from repro.launch.mesh import make_host_mesh, make_mesh
-from repro.models.api import build_model
-from repro.optim import adamw, warmup_cosine
 from repro.parallel.plan import ParallelPlan
-from repro.train.loop import LoopConfig, train_loop
-from repro.train.steps import (TrainState, _make_pctx, init_train_state,
-                               make_train_step, shardings_for)
 
 
-def parse_parallel(spec: str, devices: int, cfg) -> ParallelPlan:
+def parse_parallel(spec: str, devices: int, cfg):
+    """Resolve a --parallel spec to (plan, mp_degree).
+
+    Pure planning — no jax device access, so the launcher can still force
+    host devices afterwards for pipeline execution.
+    """
+    from repro.models.api import supports_pipeline
+
     if spec == "auto":
         planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
-        choice = planner.best(devices)
-        print(f"[planner] {choice.mesh_shape} SU={choice.speedup:.1f} "
+        choices = planner.choices(devices)
+        if not choices:
+            raise SystemExit(f"[planner] no memory-feasible strategy for "
+                             f"{cfg.name} at {devices} devices")
+        choice = next((c for c in choices if c.mp_kind != "pipeline"
+                       or supports_pipeline(cfg)), None)
+        if choice is None:
+            choice = choices[0]
+        if choice is not choices[0]:
+            print(f"[planner] best plan ({choices[0].mp_kind}) lacks runtime "
+                  f"support for {cfg.name}; using next feasible choice")
+        print(f"[planner] {choice.mesh_shape} kind={choice.mp_kind} "
+              f"micro={choice.microbatches} SU={choice.speedup:.1f} "
               f"(SU^M={choice.su_m:.2f}, SE_N={choice.se_n:.3f}, "
-              f"E1/EN={choice.epochs_ratio:.3f})")
-        return choice.plan
+              f"E1/EN={choice.epochs_ratio:.3f}, "
+              f"mem={choice.mem_bytes / 2**30:.2f} GiB)")
+        return choice.plan, choice.mp
     kv = dict(p.split("=") for p in spec.split(","))
+    pipe = int(kv.get("pipe", 0))
+    if pipe > 1:
+        plan = ParallelPlan(dp_axes=("data",), model_axis="model",
+                            mp_kind="pipeline",
+                            microbatches=int(kv.get("micro", 4)))
+        return plan, pipe
     mp = int(kv.get("mp", 1))
-    return ParallelPlan(dp_axes=("data",),
+    plan = ParallelPlan(dp_axes=("data",),
                         model_axis="model" if mp > 1 else None,
                         microbatches=int(kv.get("accum", 1)))
+    return plan, mp
+
+
+def _ensure_host_devices(n: int):
+    """Force ``n`` host platform devices — must run before jax initializes
+    its backend (which is why main() defers every jax call until after the
+    plan is known)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def main():
@@ -50,7 +84,9 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--parallel", default="dp=1,mp=1")
-    ap.add_argument("--devices", type=int, default=len(jax.devices()))
+    ap.add_argument("--devices", type=int, default=0,
+                    help="planner device budget for --parallel auto "
+                         "(default: 256, the single-pod production budget)")
     ap.add_argument("--reduced", action="store_true",
                     help="2-layer small config (CPU)")
     ap.add_argument("--batch", type=int, default=16)
@@ -62,13 +98,58 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    plan = parse_parallel(args.parallel, args.devices, cfg)
+    budget = args.devices or 256
+    plan, mp = parse_parallel(args.parallel, budget, cfg)
+
+    # Pipeline plans need a real mesh axis with one device per stage; size
+    # the executable stage count to the local machine, then (on CPU) force
+    # that many host devices BEFORE any jax backend init below.
+    pipeline = plan.is_pipeline and mp > 1
+    if pipeline:
+        from repro.models.api import pipeline_applicable
+        if not pipeline_applicable(cfg, mp):
+            raise SystemExit(
+                f"[plan] {cfg.name}: {mp} pipeline stages need a supported "
+                f"arch with n_layers % stages == 0 (n_layers={cfg.n_layers})")
+        # the planner models micro-batches against its reference batch; the
+        # executed run must use a count that divides the actual --batch
+        micro = max(k for k in range(1, min(plan.microbatches, args.batch) + 1)
+                    if args.batch % k == 0)
+        if micro != plan.microbatches:
+            print(f"[plan] clamped micro-batches {plan.microbatches} -> "
+                  f"{micro} (batch={args.batch})")
+            plan = dataclasses.replace(plan, microbatches=micro)
+        _ensure_host_devices(mp)
+
+    import jax
+    import numpy as np
+
+    from repro.data import DataPipeline, make_lm_dataset
+    from repro.launch.mesh import make_host_mesh, make_mesh
+    from repro.models.api import build_model
+    from repro.optim import adamw, warmup_cosine
+    from repro.parallel.jaxcompat import set_mesh
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.steps import (init_train_state, make_train_step)
+
+    if pipeline:
+        if jax.device_count() < mp:
+            raise SystemExit(f"[mesh] pipeline plan needs {mp} devices, have "
+                             f"{jax.device_count()} (jax initialized early?)")
+        mesh = make_mesh(dp=1, mp=mp)
+        # DP collapses to the local mesh: drop pod axes / fsdp from the
+        # projected plan, keep the pipeline stages + micro-batch count
+        plan = dataclasses.replace(plan, dp_axes=("data",), fsdp_axes=())
+    else:
+        mesh = make_host_mesh()
+        plan = dataclasses.replace(plan, dp_axes=("data",), fsdp_axes=())
+    print(f"[plan] {plan.describe(mesh)}")
+
     api = build_model(cfg)
     data = make_lm_dataset(vocab=min(cfg.vocab_size, 64), seq_len=args.seq)
     print(f"[data] markov-lm entropy floor = {data.entropy:.4f} nats/token")
 
     opt = adamw(warmup_cosine(args.lr, 20, args.steps))
-    mesh = make_host_mesh()
     pctx = None
     train_step = make_train_step(api, opt, mesh=mesh, plan=plan, pctx=pctx)
     state = init_train_state(api, opt, jax.random.PRNGKey(0))
@@ -83,11 +164,12 @@ def main():
                        "labels": b["labels"].astype(np.int32)}
         return gen()
 
-    pipeline = DataPipeline(epoch_fn)
-    summary = train_loop(train_step, state, pipeline,
-                         LoopConfig(total_steps=args.steps,
-                                    ckpt_every=100 if args.ckpt_dir else 0,
-                                    ckpt_dir=args.ckpt_dir))
+    pipeline_data = DataPipeline(epoch_fn)
+    with set_mesh(mesh):
+        summary = train_loop(train_step, state, pipeline_data,
+                             LoopConfig(total_steps=args.steps,
+                                        ckpt_every=100 if args.ckpt_dir else 0,
+                                        ckpt_dir=args.ckpt_dir))
     print(f"[done] steps={summary['steps']} final_loss="
           f"{summary['final_loss']:.4f} wall={summary['wall_s']:.1f}s "
           f"(floor {data.entropy:.4f})")

@@ -14,6 +14,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.jaxcompat import shard_map
+
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import inception as inc_mod
 from repro.models import lstm as lstm_mod
@@ -68,10 +70,10 @@ def vocab_parallel_cross_entropy(logits, labels, n_valid_vocab: int, *,
         den = jax.lax.psum(mask.sum(), baxes) if baxes else mask.sum()
         return num / jnp.maximum(den, 1)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, None, model_axis), P(bspec, None)),
-        out_specs=P(), check_vma=False)(logits, labels)
+        out_specs=P())(logits, labels)
 
 
 @dataclasses.dataclass
@@ -81,6 +83,9 @@ class ModelApi:
     loss_fn: Callable                 # (params, batch, pctx) -> (loss, metrics)
     prefill: Optional[Callable]       # (params, batch, pctx, capacity, window) -> (logits, cache)
     decode_fn: Optional[Callable]     # (params, cache, batch, pctx, window) -> (logits, cache)
+    # (params, batch, mesh=, axis=, n_micro=) -> (loss, metrics); set for the
+    # archs whose layer stack the GPipe runtime can partition into stages
+    pipeline_loss_fn: Optional[Callable] = None
 
     def input_specs(self, shape: InputShape, *, reduced: bool = False) -> Dict[str, Any]:
         return make_input_specs(self.cfg, shape, reduced=reduced)
@@ -169,6 +174,25 @@ def make_input_specs(cfg: ModelConfig, shape: InputShape, *, reduced: bool = Fal
 
 # ---------------------------------------------------------------------------
 
+def supports_pipeline(cfg: ModelConfig) -> bool:
+    """Archs whose layer stack the pipeline runtime can partition: BigLSTM's
+    residual LSTM stack and homogeneous decoder-only transformers.  GNMT's
+    encoder/decoder split and the CNN block graph need stage functions the
+    GPipe runtime does not model (the planner still *costs* pipeline-MP for
+    GNMT; execution falls back to the best supported plan)."""
+    if cfg.name == "biglstm":
+        return True
+    if cfg.family == "cnn" or cfg.name == "gnmt":
+        return False
+    return not (cfg.encoder_layers or cfg.n_prefix_embeds or cfg.is_moe)
+
+
+def pipeline_applicable(cfg: ModelConfig, n_stages: int) -> bool:
+    """Can this arch run as ``n_stages`` pipeline stages at runtime?"""
+    return (supports_pipeline(cfg) and n_stages > 1
+            and cfg.n_layers % n_stages == 0)
+
+
 def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
                 remat: bool = True, capacity_factor=1.25) -> ModelApi:
     if cfg.family == "cnn":
@@ -205,7 +229,14 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 
-        return ModelApi(cfg, init, loss_fn, None, None)
+        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro):
+            logits = lstm_mod.biglstm_forward_pipeline(
+                cfg, params, batch, mesh=mesh, axis=axis, n_micro=n_micro)
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+            return loss, {"loss": loss}
+
+        return ModelApi(cfg, init, loss_fn, None, None,
+                        pipeline_loss_fn=pipe_loss_fn)
 
     # --- transformer families ---
     def init(key):
@@ -240,4 +271,15 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
         return tf_mod.decode_step(cfg, params, cache, batch,
                                   window_override=window, pctx=pctx)
 
-    return ModelApi(cfg, init, loss_fn, prefill, decode_fn)
+    pipe_loss_fn = None
+    if supports_pipeline(cfg):
+        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro):
+            fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
+            logits = tf_mod.forward_pipeline(
+                cfg, params, fwd_batch, mesh=mesh, axis=axis, n_micro=n_micro,
+                remat=remat, rwkv_chunked=rwkv_chunked)
+            loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+            return loss, {"loss": loss}
+
+    return ModelApi(cfg, init, loss_fn, prefill, decode_fn,
+                    pipeline_loss_fn=pipe_loss_fn)

@@ -13,6 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.jaxcompat import shard_map
+
 # ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
@@ -298,9 +300,8 @@ def seq_sharded_decode_attention(q, k_cache, v_cache, cache_valid, k_new,
     in_specs = (P(bspec, None, None, None), P(bspec, seq_axis, None, None),
                 P(bspec, seq_axis, None, None), P(bspec, seq_axis))
     out_specs = (P(bspec, None), P(bspec, None), P(bspec, None, None))
-    stats_cache = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                                out_specs=out_specs,
-                                check_vma=False)(q, k_cache, v_cache,
+    stats_cache = shard_map(local, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs)(q, k_cache, v_cache,
                                                  cache_valid)
     # the new token always sees itself
     ones = jnp.ones(k_new.shape[:2], bool)
@@ -343,7 +344,7 @@ def seq_sharded_cache_insert(cache_k, cache_v, k_new, v_new, pos, *, mesh,
 
     spec = P(bspec, seq_axis, None, None)
     rspec = P(bspec, None, None, None)
-    return jax.shard_map(local, mesh=mesh,
+    return shard_map(local, mesh=mesh,
                          in_specs=(spec, spec, rspec, rspec),
-                         out_specs=(spec, spec), check_vma=False)(
+                         out_specs=(spec, spec))(
                              cache_k, cache_v, k_new, v_new)

@@ -15,6 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init, embed_init
+from repro.parallel.pipeline import pipeline_apply, stack_to_stages
+
+
+def stack_layer_params(layer_list):
+    """Homogeneous per-layer param dicts -> one stacked (L, ...) pytree, the
+    layout ``parallel.pipeline.stack_to_stages`` partitions into stages."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layer_list)
 
 
 def lstm_cell_init(key, d_in: int, d_h: int, d_proj: int = 0, dtype=jnp.float32):
@@ -124,4 +131,27 @@ def biglstm_forward(cfg, params, batch):
     for lp in params["lstm"]:
         y, _ = lstm_layer(lp, x)
         x = x + y
+    return x @ params["head"].astype(dt)
+
+
+def biglstm_forward_pipeline(cfg, params, batch, *, mesh, axis: str,
+                             n_micro: int):
+    """BigLSTM forward with the residual LSTM stack partitioned into GPipe
+    stages over mesh ``axis`` — the paper's §4.4 MP implementation for the
+    RNN models, streaming ``n_micro`` micro-batches through the stages.
+    Bit-equal (fp32) to ``biglstm_forward``; embed/softmax stay replicated."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    n_stages = mesh.shape[axis]
+    stages = stack_to_stages(stack_layer_params(params["lstm"]), n_stages)
+
+    def stage_fn(sp, x):
+        def body(x, lp):
+            y, _ = lstm_layer(lp, x)
+            return x + y, None
+
+        x, _ = jax.lax.scan(body, x, sp)
+        return x
+
+    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro)
     return x @ params["head"].astype(dt)

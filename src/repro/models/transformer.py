@@ -21,6 +21,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel.jaxcompat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
@@ -430,9 +432,9 @@ def block_apply(cfg, p, x, *, mode: str, window: int, pos0, cache=None,
                 bspec)
             fn = functools.partial(moe_mod.moe_ffn, cfg=cfg, model_axis=ma,
                                    ff_axes=fa, capacity_factor=cf)
-            mlp_out, moe_aux = jax.shard_map(
+            mlp_out, moe_aux = shard_map(
                 fn, mesh=pctx.mesh, in_specs=in_specs,
-                out_specs=(bspec, P()), check_vma=False)(p["moe"], h2)
+                out_specs=(bspec, P()))(p["moe"], h2)
         else:
             mlp_out, moe_aux = moe_mod.moe_ffn(p["moe"], h2, cfg,
                                                capacity_factor=cf)
@@ -545,6 +547,36 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
         caches["pos"] = jnp.asarray(tokens.shape[1] + n_prefix, jnp.int32)
         return logits, caches, aux
     return logits, aux
+
+
+def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
+                     remat: bool = True, rwkv_chunked: bool = False,
+                     window_override=None):
+    """Train-mode forward with the decoder stack partitioned into GPipe
+    stages over mesh ``axis`` (``parallel.pipeline``), ``n_micro``
+    micro-batches in flight.  Supported for homogeneous decoder-only stacks
+    (no encoder, no prefix embeds, no MoE aux loss); embed and head stay
+    replicated on every stage.  Returns logits only."""
+    from repro.parallel.pipeline import pipeline_apply, stack_to_stages
+
+    window = cfg.sliding_window if window_override is None else window_override
+    x = _embed(cfg, params, batch["tokens"])
+    n_stages = mesh.shape[axis]
+    stages = stack_to_stages(params["layers"], n_stages)
+
+    def stage_fn(sp, x):
+        def body(x, lp):
+            y, _, _ = block_apply(cfg, lp, x, mode="train", window=window,
+                                  pos0=0, rwkv_chunked=rwkv_chunked)
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, sp)
+        return x
+
+    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro)
+    return _head(cfg, params, x)
 
 
 def decode_step(cfg, params, cache, batch, *, window_override=None,

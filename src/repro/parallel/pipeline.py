@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.jaxcompat import shard_map
+
 
 def pipeline_apply(mesh, axis: str, stage_fn: Callable, stage_params, x,
                    n_micro: int, batch_axes=()):
@@ -64,8 +66,8 @@ def pipeline_apply(mesh, axis: str, stage_fn: Callable, stage_params, x,
 
     p_specs = jax.tree.map(lambda _: P(axis), stage_params)
     x_spec = P(None, bspec[0], *([None] * (x.ndim - 1)))
-    out = jax.shard_map(inner, mesh=mesh, in_specs=(p_specs, x_spec),
-                        out_specs=x_spec, check_vma=False)(stage_params, xm)
+    out = shard_map(inner, mesh=mesh, in_specs=(p_specs, x_spec),
+                    out_specs=x_spec)(stage_params, xm)
     return out.reshape(x.shape)
 
 

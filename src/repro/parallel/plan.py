@@ -18,20 +18,27 @@ import jax
 @dataclasses.dataclass(frozen=True)
 class ParallelPlan:
     dp_axes: Tuple[str, ...] = ("data",)   # batch sharded over these (paper's N)
-    model_axis: Optional[str] = "model"    # tensor/expert MP axis (paper's M)
+    model_axis: Optional[str] = "model"    # tensor/pipeline MP axis (paper's M)
     fsdp_axes: Tuple[str, ...] = ()        # params/opt additionally sharded here
     mp_kind: str = "tensor"                # "tensor" | "pipeline"
-    microbatches: int = 1                  # delayed-gradient accumulation (§4.2)
+    # For mp_kind="tensor": delayed-gradient accumulation count (§4.2).
+    # For mp_kind="pipeline": GPipe micro-batches fed through the stages.
+    microbatches: int = 1
     remat: bool = True
+
+    @property
+    def is_pipeline(self) -> bool:
+        return self.mp_kind == "pipeline" and self.model_axis is not None
 
     def describe(self, mesh) -> str:
         dp = 1
         for a in self.dp_axes:
             dp *= mesh.shape[a]
         mp = mesh.shape[self.model_axis] if self.model_axis else 1
+        unit = "micro" if self.is_pipeline else "accum"
         return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP"
                 f"{' +fsdp' if self.fsdp_axes else ''}"
-                f"{f' x{self.microbatches} accum' if self.microbatches > 1 else ''}")
+                f"{f' x{self.microbatches} {unit}' if self.microbatches > 1 else ''}")
 
 
 def plan_degrees(plan: ParallelPlan, mesh) -> Tuple[int, int]:
@@ -46,3 +53,4 @@ def plan_degrees(plan: ParallelPlan, mesh) -> Tuple[int, int]:
 PAPER_BASELINE = ParallelPlan()                                  # DP x tensor-MP
 PAPER_DP_ONLY = ParallelPlan(model_axis=None)                    # pure DP
 OPTIMIZED = ParallelPlan(fsdp_axes=("data",))                    # + ZeRO-3
+PAPER_PIPELINE = ParallelPlan(mp_kind="pipeline", microbatches=4)  # §4.4 GPipe

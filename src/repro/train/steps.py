@@ -56,11 +56,29 @@ def _make_pctx(mesh, plan: ParallelPlan, batch_shardable: bool,
 def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
                     plan: ParallelPlan = ParallelPlan(), clip_norm: float = 1.0,
                     pctx: Optional[ParallelCtx] = None):
-    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn)."""
-    micro = plan.microbatches
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn).
 
-    def loss_fn(params, batch):
-        return api.loss_fn(params, batch, pctx)
+    ``mp_kind="pipeline"`` plans route the forward/backward through the
+    arch's GPipe runtime (``api.pipeline_loss_fn`` -> ``pipeline_apply``):
+    ``plan.microbatches`` then counts in-flight pipeline micro-batches, not
+    delayed-gradient accumulation steps, so the accumulation loop is off.
+    """
+    pipelined = (plan.is_pipeline and mesh is not None
+                 and mesh.shape[plan.model_axis] > 1)
+    if pipelined and api.pipeline_loss_fn is None:
+        raise ValueError(
+            f"{api.cfg.name}: plan requests pipeline-MP but the arch has no "
+            f"pipeline runtime (models.api.supports_pipeline)")
+    micro = 1 if pipelined else plan.microbatches
+
+    if pipelined:
+        def loss_fn(params, batch):
+            return api.pipeline_loss_fn(params, batch, mesh=mesh,
+                                        axis=plan.model_axis,
+                                        n_micro=max(plan.microbatches, 1))
+    else:
+        def loss_fn(params, batch):
+            return api.loss_fn(params, batch, pctx)
 
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -157,7 +175,7 @@ def shardings_for(api: ModelApi, mesh, plan: ParallelPlan, optimizer: Optimizer,
                     ok = False
             return P(*([None] * len(leaf.shape)))
 
-        flat, tree = jax.tree.flatten_with_path(opt_shape_tree)
+        flat, tree = jax.tree_util.tree_flatten_with_path(opt_shape_tree)
         return tree.unflatten([resolve(p, l) for p, l in flat])
 
     o_spec = opt_spec_tree(opt_shape)

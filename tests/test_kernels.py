@@ -18,6 +18,7 @@ def _rand(key, shape, dtype):
 
 @pytest.mark.parametrize("b,t,h,hd", [(2, 256, 4, 64), (1, 128, 2, 128),
                                       (1, 192, 3, 64), (2, 96, 5, 32)])
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
 def test_flash_attention_sweep(b, t, h, hd, dtype, causal, window):
@@ -47,6 +48,7 @@ def test_flash_attention_cross_lengths():
     assert float(jnp.abs(out - ref).max()) < 2e-5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,chunk", [(128, 32), (256, 64), (256, 128)])
 @pytest.mark.parametrize("hd", [32, 64])
 def test_wkv6_sweep(t, chunk, hd):
@@ -64,6 +66,7 @@ def test_wkv6_sweep(t, chunk, hd):
 
 @pytest.mark.parametrize("g,c,d,f", [(4, 100, 192, 160), (2, 64, 64, 64),
                                      (8, 37, 130, 70)])
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_gmm_sweep(g, c, d, f, dtype):
     ks = jax.random.split(jax.random.PRNGKey(g * c), 2)
@@ -76,6 +79,7 @@ def test_gmm_sweep(g, c, d, f, dtype):
                          - ref.astype(jnp.float32)).max()) < tol
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("bsz,din,hh", [(36, 96, 200), (8, 64, 64),
                                         (130, 128, 96)])
 def test_lstm_cell_sweep(bsz, din, hh):

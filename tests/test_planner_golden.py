@@ -1,0 +1,57 @@
+"""Golden regression pins for the 3-way planner on the paper's three archs.
+
+These values ARE expected to move when the cost model changes — that is the
+point: any edit to the tensor/pipeline SU^M models, the SE_N comm model, the
+epoch-inflation prior, or the memory filter surfaces here as a visible,
+reviewable diff instead of silently reshaping every downstream projection.
+Update the table deliberately, alongside the cost-model change.
+
+Settings pinned to the planner defaults used by ``--parallel auto``:
+``default_epoch_model``, mini_batch=16, seq_len=4096, TPU-v5e HardwareModel,
+se_perfect=False.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import HybridPlanner, default_epoch_model
+
+# (arch, devices) -> (mp_kind, pods, dp, mp, microbatches, speedup)
+GOLDEN = {
+    ("inception_v3", 64): ("none", 1, 64, 1, 1, 1.4207),
+    ("inception_v3", 256): ("tensor", 1, 8, 32, 1, 0.774818),
+    ("inception_v3", 1024): ("tensor", 4, 8, 32, 1, 0.435361),
+    ("gnmt", 64): ("pipeline", 1, 16, 4, 8, 15.0249),
+    ("gnmt", 256): ("pipeline", 1, 64, 4, 8, 5.45537),
+    ("gnmt", 1024): ("pipeline", 4, 64, 4, 8, 1.40307),
+    ("biglstm", 64): ("pipeline", 1, 32, 2, 8, 34.1723),
+    ("biglstm", 256): ("pipeline", 1, 128, 2, 8, 19.685),
+    ("biglstm", 1024): ("pipeline", 4, 128, 2, 8, 5.35752),
+}
+
+
+@pytest.mark.parametrize("arch", ["inception_v3", "gnmt", "biglstm"])
+def test_planner_golden_choices(arch):
+    cfg = get_config(arch)
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+    for devices in (64, 256, 1024):
+        kind, pods, dp, mp, micro, speedup = GOLDEN[(arch, devices)]
+        best = planner.best(devices)
+        got = (best.mp_kind, best.pods, best.dp, best.mp, best.microbatches)
+        assert got == (kind, pods, dp, mp, micro), (
+            f"{arch}@{devices}: planner now picks {got}, golden is "
+            f"{(kind, pods, dp, mp, micro)} — if the cost-model change is "
+            f"intentional, update GOLDEN")
+        assert best.speedup == pytest.approx(speedup, rel=1e-3), (
+            f"{arch}@{devices}: projected SU moved")
+
+
+def test_paper_rnn_archs_pipeline_at_scale():
+    """The paper's §4.4 claim as a pinned planner outcome: at >= 256 devices
+    the LSTM-family archs' arg-max plan is pipeline-MP, not tensor or DP."""
+    for arch in ("gnmt", "biglstm"):
+        cfg = get_config(arch)
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+        for devices in (256, 1024):
+            best = planner.best(devices)
+            assert best.mp_kind == "pipeline", (arch, devices, best)
+            assert best.plan.is_pipeline and best.plan.microbatches > 1

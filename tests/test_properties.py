@@ -7,12 +7,23 @@ import pytest
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.core.analytical import (TrainingRun, crossover_device_count,
-                                   speedup_dp, speedup_hybrid)
+                                   speedup_dp, speedup_hybrid,
+                                   speedup_pipeline)
 from repro.core.comm import HardwareModel, ring_all_reduce_time
 from repro.core.dlplacer import DFG, HardwareGraph, OpCost, list_schedule
-from repro.core.planner import HybridPlanner, default_epoch_model, mp_step_speedup
+from repro.core.planner import (HybridPlanner, default_epoch_model,
+                                mp_step_speedup, per_device_mem_bytes,
+                                pipeline_step_speedup_model)
 from repro.core.roofline import model_flops
 from repro.core.stateff import EpochModel, EpochTable
+
+PLANNER_ARCHS = ARCH_IDS + ["biglstm", "gnmt", "inception_v3"]
+PLANNER_BUDGETS = (64, 256, 1024)
+
+
+def make_planner(arch):
+    cfg = get_config(arch)
+    return cfg, HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
 
 
 def run_with(b_crit, su2=1.3, alpha=2.0):
@@ -75,14 +86,108 @@ def test_mp_speedup_bounds(arch):
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_planner_best_dominates_dp_only(arch):
-    """The planner's choice is never worse than DP-only at the same budget."""
+    """The planner's choice is never worse than any feasible DP-only point at
+    the same budget (memory-infeasible DP points are *pruned*, so they are
+    exempt from the dominance claim)."""
     cfg = get_config(arch)
     pl = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
                        se_perfect=False)
     for d in (64, 512):
-        best = pl.best(d)
-        dp_only = speedup_hybrid(pl.run, d, 1)
-        assert best.speedup >= dp_only - 1e-9
+        choices = pl.choices(d)
+        if not choices:      # arch does not fit at this budget at all
+            continue
+        best = choices[0]
+        if any(c.mp_kind == "none" for c in choices):
+            dp_only = speedup_hybrid(pl.run, d, 1)
+            assert best.speedup >= dp_only - 1e-9
+
+
+@pytest.mark.parametrize("arch", PLANNER_ARCHS)
+def test_planner_choices_factorize_budget(arch):
+    """Every returned choice factorizes the device budget exactly, and its
+    executable plan is consistent with the choice's (kind, M, K)."""
+    cfg, pl = make_planner(arch)
+    for d in PLANNER_BUDGETS:
+        for c in pl.choices(d):
+            assert c.pods * c.dp * c.mp == d, (arch, d, c)
+            prod = 1
+            for s in c.mesh_shape:
+                prod *= s
+            assert prod == d, (arch, d, c.mesh_shape)
+            assert (c.mp > 1) == (c.plan.model_axis is not None)
+            if c.mp_kind == "pipeline":
+                assert c.plan.mp_kind == "pipeline"
+                assert c.plan.microbatches == c.microbatches > 1
+                assert cfg.n_layers % c.mp == 0, (arch, c.mp)
+            else:
+                assert c.microbatches == 1
+                assert c.plan.mp_kind == "tensor"
+
+
+@pytest.mark.parametrize("arch", PLANNER_ARCHS)
+def test_planner_choices_sorted_by_speedup(arch):
+    """choices() is best-first: projected speedups are non-increasing."""
+    _, pl = make_planner(arch)
+    for d in PLANNER_BUDGETS:
+        sus = [c.speedup for c in pl.choices(d)]
+        assert all(a >= b - 1e-12 for a, b in zip(sus, sus[1:])), (arch, d)
+
+
+@pytest.mark.parametrize("arch", PLANNER_ARCHS)
+def test_planner_memory_feasibility(arch):
+    """No returned choice exceeds the per-device memory budget, fsdp is only
+    engaged when the unsharded point does not fit, and infeasible pure-DP
+    points never appear."""
+    cfg, pl = make_planner(arch)
+    hbm = pl.hw.hbm_bytes
+    for d in PLANNER_BUDGETS:
+        for c in pl.choices(d):
+            assert c.mem_bytes <= hbm, (arch, d, c)
+            mem_plain = per_device_mem_bytes(
+                cfg, mp=c.mp,
+                mp_kind="pipeline" if c.mp_kind == "pipeline" else "tensor",
+                fsdp=1, mini_batch=pl.mini_batch, seq_len=pl.seq_len,
+                opt_bytes_per_param=pl.opt_bytes_per_param, remat=pl.remat)
+            if c.plan.fsdp_axes:
+                assert mem_plain > hbm, (arch, d, c)     # fsdp was needed
+            else:
+                assert mem_plain <= hbm, (arch, d, c)    # and reported as such
+            if c.mp_kind == "none" and not c.plan.fsdp_axes:
+                assert mem_plain <= hbm
+
+
+def test_planner_prunes_infeasible_pure_dp():
+    """1T params on 16 GiB devices: unsharded pure DP must never be ranked."""
+    cfg, pl = make_planner("kimi_k2_1t_a32b")
+    assert per_device_mem_bytes(
+        cfg, mp=1, fsdp=1, mini_batch=pl.mini_batch, seq_len=pl.seq_len,
+        opt_bytes_per_param=pl.opt_bytes_per_param) > pl.hw.hbm_bytes
+    for d in PLANNER_BUDGETS:
+        for c in pl.choices(d):
+            assert not (c.mp_kind == "none" and not c.plan.fsdp_axes), (d, c)
+
+
+@pytest.mark.parametrize("arch", ["biglstm", "gnmt", "llama3_2_1b"])
+def test_pipeline_step_speedup_monotone_in_micro(arch):
+    """More micro-batches => smaller bubble => SU^M non-decreasing in K, and
+    SU^M is always in (0, M]."""
+    cfg = get_config(arch)
+    hw = HardwareModel()
+    for m in (2, 4):
+        if cfg.n_layers % m:
+            continue
+        sus = [pipeline_step_speedup_model(cfg, m, k, hw, mini_batch=16,
+                                           seq_len=4096)
+               for k in (2, 4, 8, 16)]
+        assert all(0.0 < su <= m for su in sus), (arch, m, sus)
+        assert all(b >= a - 1e-12 for a, b in zip(sus, sus[1:])), (arch, m)
+
+
+def test_speedup_pipeline_reduces_to_dp_at_m1():
+    run = run_with(1024)
+    for n in (4, 64):
+        assert speedup_pipeline(run, n, 1, 8) == pytest.approx(
+            speedup_dp(run, n))
 
 
 @pytest.mark.parametrize("seed", range(6))
