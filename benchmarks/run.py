@@ -38,6 +38,10 @@ def main() -> None:
     except FileNotFoundError:
         print("roofline,skipped (run launch/dryrun.py first)")
 
+    if full:
+        from benchmarks import pipeline_schedule_sweep
+        pipeline_schedule_sweep.run()
+
     print(f"benchmark,done,wall_s={time.time() - t0:.1f}")
 
 

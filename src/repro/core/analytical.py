@@ -15,10 +15,12 @@ MP implementations (§4.3/§4.4):
 
 - **tensor** MP (``mp_speedup``: M -> SU^M) — intra-layer sharding, the
   Megatron/DLPlacer style the paper measures for Inception-V3;
-- **pipeline** MP (``pipe_speedup``: (M, K) -> SU^M for M stages and K
-  micro-batches) — GPipe-style layer pipelining, the style the paper uses
-  for GNMT and BigLSTM, with SU^M = M * (1 - bubble) / (1 + comm), where
-  bubble = (M-1)/(K+M-1) and comm is the inter-stage activation-transfer
+- **pipeline** MP (``pipe_speedup``: (M, K, schedule) -> SU^M for M stages,
+  K micro-batches and a pipeline schedule) — layer pipelining, the style
+  the paper uses for GNMT and BigLSTM, with SU^M = M * (1 - bubble) /
+  (1 + comm), where bubble is the schedule's idle fraction
+  ((M-1)/(K+M-1) for gpipe/1f1b, (M-1)/(vK+M-1) for interleaved — see
+  ``parallel.pipeline``) and comm is the inter-stage activation-transfer
   time as a fraction of per-micro-batch stage compute.
 """
 from __future__ import annotations
@@ -43,8 +45,9 @@ class TrainingRun:
     mp_speedup: Dict[int, float]   # M -> tensor-MP SU^M (Table 1 / DLPlacer)
     hw: HardwareModel = HardwareModel()
     se_perfect: bool = True        # paper's conservative SE_N = 1
-    # (M stages, K micro-batches) -> pipeline-MP SU^M (GPipe bubble model)
-    pipe_speedup: Dict[Tuple[int, int], float] = \
+    # (M stages, K micro-batches, schedule) -> pipeline-MP SU^M (per-schedule
+    # bubble model); plain (M, K) keys are accepted as gpipe for back-compat
+    pipe_speedup: Dict[Tuple, float] = \
         dataclasses.field(default_factory=dict)
 
 
@@ -80,12 +83,14 @@ def speedup_hybrid(run: TrainingRun, n_workers: int, m: int) -> float:
 
 
 def speedup_pipeline(run: TrainingRun, n_workers: int, m: int,
-                     n_micro: int) -> float:
+                     n_micro: int, schedule: str = "gpipe") -> float:
     """Eq. 5 with pipeline-MP workers: N-way DP of M-stage pipelines fed with
-    ``n_micro`` micro-batches each, M*N devices total."""
+    ``n_micro`` micro-batches each under ``schedule``, M*N devices total."""
     if m <= 1:
         return speedup_dp(run, n_workers)
-    su_m = run.pipe_speedup.get((m, n_micro), 0.0)
+    su_m = run.pipe_speedup.get((m, n_micro, schedule),
+                                run.pipe_speedup.get((m, n_micro), 0.0)
+                                if schedule == "gpipe" else 0.0)
     return (su_m * se(run, n_workers, grad_scale=1.0 / m)
             * n_workers * epochs_ratio(run, n_workers))
 

@@ -8,26 +8,30 @@ budget into
 
 where the M-way model parallelism is either **tensor-MP** (intra-layer
 sharding on the ICI torus, the paper's §4.3 / DLPlacer style) or
-**pipeline-MP** (GPipe-style layer pipelining with K micro-batches, the
+**pipeline-MP** (layer pipelining with K micro-batches under a searched
+**schedule** — gpipe / 1f1b / interleaved, see ``parallel.pipeline`` — the
 paper's §4.4 implementation for GNMT and BigLSTM).  For each point it
 
 (a) builds a per-step cost model from the arch's FLOPs/bytes:
     tensor SU^M from the Megatron all-reduce pattern, pipeline SU^M from the
-    analytic bubble fraction (M-1)/(K+M-1) plus the inter-stage ``ppermute``
-    activation-transfer time;
+    schedule's analytic bubble fraction ((M-1)/(K+M-1) for gpipe/1f1b,
+    (M-1)/(vK+M-1) for interleaved) plus the inter-stage ``ppermute``
+    activation-transfer time (scaled by v for interleaved's extra rings);
 (b) derives SE_N from the (hierarchical) ring-all-reduce model, with the
     gradient exchange scaled by 1/M because each MP worker owns 1/M of the
     parameters;
 (c) takes E(B) from measured curves or the fitted inflation model;
 (d) applies a per-device **memory-feasibility filter** — f32 master params +
-    optimizer state + gradients + remat boundary activations, ZeRO/fsdp-aware:
-    a point that only fits with params/opt sharded over DP is emitted with
-    ``fsdp_axes`` set, and a point that does not fit even then is pruned
-    rather than ranked;
+    optimizer state + gradients + remat boundary activations, ZeRO/fsdp-aware
+    and **schedule-aware** (gpipe holds all K micro-batch activations, 1f1b
+    at most min(K, S) — so 1f1b keeps micro-batch counts feasible that gpipe
+    cannot fit): a point that only fits with params/opt sharded over DP is
+    emitted with ``fsdp_axes`` set, and a point that does not fit even then
+    is pruned rather than ranked;
 (e) evaluates Eq. 4 vs Eq. 5 over the surviving points and returns them
     best-first, each as an executable ``ParallelPlan`` (tensor plans with
-    ``model_axis``, pipeline plans additionally with ``mp_kind="pipeline"``
-    and ``microbatches=K``) + mesh shape.
+    ``model_axis``, pipeline plans additionally with ``mp_kind="pipeline"``,
+    ``microbatches=K``, ``schedule``, ``virtual_stages``) + mesh shape.
 
 ``launch/train.py --parallel auto`` calls this and actually runs the winning
 plan (pipeline plans go through ``parallel.pipeline.pipeline_apply``);
@@ -45,8 +49,12 @@ from repro.core.analytical import (TrainingRun, speedup_dp, speedup_hybrid,
 from repro.core.comm import (HardwareModel, hierarchical_all_reduce_time,
                              p2p_transfer_time)
 from repro.core.stateff import EpochModel, fit_epoch_model
-from repro.parallel.pipeline import pipeline_step_speedup
+from repro.parallel.pipeline import (pipeline_activation_residency,
+                                     pipeline_step_speedup)
 from repro.parallel.plan import ParallelPlan
+
+# interleaved virtual chunks per device the planner searches (Megatron's v)
+INTERLEAVE_CHUNKS = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +64,8 @@ class PlannerChoice:
     mp: int
     mp_kind: str                   # "none" | "tensor" | "pipeline"
     microbatches: int              # pipeline micro-batches K (1 otherwise)
+    schedule: str                  # pipeline schedule ("-" for non-pipeline)
+    virtual_stages: int            # interleaved chunks per device (v)
     speedup: float                 # projected SU over a single device (Eq. 5)
     su_m: float                    # per-step MP speedup used
     se_n: float
@@ -89,20 +99,25 @@ def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel) -> float:
 
 def pipeline_step_speedup_model(cfg: ModelConfig, m: int, n_micro: int,
                                 hw: HardwareModel, *, mini_batch: int,
-                                seq_len: int) -> float:
-    """Pipeline-MP SU^M for an m-stage GPipe schedule with ``n_micro``
-    micro-batches: bubble fraction (m-1)/(n_micro+m-1) plus the inter-stage
+                                seq_len: int, schedule: str = "gpipe",
+                                virtual_stages: int = 1) -> float:
+    """Pipeline-MP SU^M for an m-stage schedule with ``n_micro``
+    micro-batches: the schedule's bubble fraction ((m-1)/(n_micro+m-1) for
+    gpipe/1f1b, (m-1)/(v*n_micro+m-1) for interleaved) plus the inter-stage
     ``ppermute`` activation transfer (one (b/K, s, d) tensor forward and its
-    gradient backward per boundary per micro-batch)."""
+    gradient backward per boundary per micro-batch; interleaved rings the
+    activations v times, so its transfer scales by v)."""
     if m <= 1:
         return 1.0
+    v = max(virtual_stages, 1) if schedule == "interleaved" else 1
     tokens = mini_batch * seq_len
     t_step = 6.0 * cfg.n_active_params() * tokens / (hw.peak_flops * hw.mfu)
     t_stage_micro = t_step / (m * n_micro)
     act_bytes = tokens / n_micro * cfg.d_model * 2   # bf16 boundary activation
-    t_xfer = 2.0 * p2p_transfer_time(act_bytes, hw)  # fwd act + bwd grad
+    t_xfer = 2.0 * v * p2p_transfer_time(act_bytes, hw)  # fwd act + bwd grad
     comm_fraction = t_xfer / max(t_stage_micro, 1e-30)
-    return pipeline_step_speedup(m, n_micro, comm_fraction)
+    return pipeline_step_speedup(m, n_micro, comm_fraction,
+                                 schedule=schedule, virtual_stages=v)
 
 
 def pipeline_stage_candidates(cfg: ModelConfig,
@@ -116,6 +131,21 @@ def pipeline_stage_candidates(cfg: ModelConfig,
             continue
         ok.append(m)
     return tuple(ok)
+
+
+def pipeline_schedule_candidates(cfg: ModelConfig, m: int,
+                                 n_micro: int) -> Tuple[Tuple[str, int], ...]:
+    """(schedule, v) points searchable at m stages with n_micro micros.
+
+    gpipe and 1f1b partition any stack m already divides; interleaved
+    additionally needs v chunks per device (layers % (m*v) == 0) and the
+    packed Megatron wave (m | n_micro) for its (m-1)/(v*K+m-1) bubble."""
+    out = [("gpipe", 1), ("1f1b", 1)]
+    v = INTERLEAVE_CHUNKS
+    if (n_micro % m == 0 and cfg.n_layers % (m * v) == 0
+            and (not cfg.encoder_layers or cfg.encoder_layers % (m * v) == 0)):
+        out.append(("interleaved", v))
+    return tuple(out)
 
 
 def tensor_mp_supported(cfg: ModelConfig) -> bool:
@@ -138,14 +168,22 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
                          mp_kind: str = "tensor", fsdp: int = 1,
                          mini_batch: int, seq_len: int,
                          opt_bytes_per_param: float = 8.0,
-                         remat: bool = True) -> float:
+                         remat: bool = True, microbatches: int = 1,
+                         schedule: str = "gpipe",
+                         virtual_stages: int = 1) -> float:
     """Projected per-device working set of one training step.
 
     f32 master params + optimizer state shard over (mp x fsdp); gradients
     shard over mp, and over fsdp too when it is on (ZeRO-2: grads are
     reduce-scattered, never fully materialized per rank); boundary
-    activations kept by remat shard over the stages for pipeline-MP and over
-    the model axis for tensor-MP.
+    activations kept by remat shard over the model axis for tensor-MP.
+
+    Pipeline-MP activations are **schedule-aware**: each in-flight
+    micro-batch holds keep_per_layer boundaries for this stage's L/mp
+    layers, and the schedule bounds how many micro-batches are in flight
+    (``pipeline_activation_residency``: K for gpipe — the full mini-batch,
+    the seed's flat model — but only min(K, S) for 1f1b, which is what lets
+    1f1b run micro-batch counts gpipe cannot fit).
     """
     p = float(cfg.n_params())
     shard = float(max(mp, 1) * max(fsdp, 1))
@@ -154,9 +192,15 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
     tokens = float(mini_batch) * float(seq_len)
     boundary = tokens * cfg.d_model * 2.0            # one bf16 (b, s, d)
     keep_per_layer = 1.0 if remat else 8.0           # remat keeps boundaries
-    act = keep_per_layer * cfg.n_layers * boundary / max(mp, 1)
     if mp_kind == "pipeline":
-        act += 2.0 * boundary                        # in-flight micro buffers
+        k = max(microbatches, 1)
+        per_micro = boundary / k                     # one micro-batch (b/K,s,d)
+        resid = pipeline_activation_residency(k, max(mp, 1), schedule,
+                                              virtual_stages)
+        act = keep_per_layer * (cfg.n_layers / max(mp, 1)) * per_micro * resid
+        act += 2.0 * per_micro                       # ring in/out buffers
+    else:
+        act = keep_per_layer * cfg.n_layers * boundary / max(mp, 1)
     return state + grads + act
 
 
@@ -167,9 +211,10 @@ def default_opt_bytes_per_param(cfg: ModelConfig) -> float:
 
 
 class HybridPlanner:
-    """Unified 3-way search over every (pods, N, M, kind, K) point of the
-    device budget: DP-only, N-way DP x M-way tensor-MP, and N-way DP x
-    M-stage pipeline-MP with K micro-batches."""
+    """Unified 4-way search over every (pods, N, M, kind, K, schedule) point
+    of the device budget: DP-only, N-way DP x M-way tensor-MP, and N-way DP
+    x M-stage pipeline-MP with K micro-batches under each feasible pipeline
+    schedule (gpipe / 1f1b / interleaved)."""
 
     def __init__(self, cfg: ModelConfig, *, epoch_model: EpochModel,
                  mini_batch: int = 16, seq_len: int = 4096,
@@ -177,7 +222,7 @@ class HybridPlanner:
                  hw: HardwareModel = HardwareModel(),
                  se_perfect: bool = False,
                  mp_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
-                 micro_candidates: Tuple[int, ...] = (2, 4, 8),
+                 micro_candidates: Tuple[int, ...] = (2, 4, 8, 16),
                  remat: bool = True,
                  opt_bytes_per_param: Optional[float] = None):
         self.cfg = cfg
@@ -204,11 +249,14 @@ class HybridPlanner:
             dataset_size=dataset_tokens // seq_len,
             mp_speedup={m: mp_step_speedup(cfg, m, hw) for m in tensor_ms},
             hw=hw, se_perfect=se_perfect,
-            pipe_speedup={(m, k): pipeline_step_speedup_model(
+            pipe_speedup={(m, k, sched): pipeline_step_speedup_model(
                               cfg, m, k, hw, mini_batch=mini_batch,
-                              seq_len=seq_len)
+                              seq_len=seq_len, schedule=sched,
+                              virtual_stages=v)
                           for m in self.pipe_candidates
-                          for k in self.micro_candidates})
+                          for k in self.micro_candidates
+                          for sched, v in pipeline_schedule_candidates(
+                              cfg, m, k)})
 
     # ---- search ------------------------------------------------------------
 
@@ -219,42 +267,51 @@ class HybridPlanner:
             if total_devices % m:
                 continue
             n = total_devices // m
-            kinds: List[Tuple[str, int]] = []
+            kinds: List[Tuple[str, int, str, int]] = []
             if m == 1:
-                kinds.append(("none", 1))
+                kinds.append(("none", 1, "-", 1))
             else:
                 if m in self.run.mp_speedup:
-                    kinds.append(("tensor", 1))
+                    kinds.append(("tensor", 1, "-", 1))
                 if m in self.pipe_candidates:
-                    kinds.extend(("pipeline", k) for k in self.micro_candidates)
-            for kind, k in kinds:
-                choice = self._evaluate(total_devices, n, m, kind, k)
+                    kinds.extend(
+                        ("pipeline", k, sched, v)
+                        for k in self.micro_candidates
+                        for sched, v in pipeline_schedule_candidates(
+                            self.cfg, m, k))
+            for kind, k, sched, v in kinds:
+                choice = self._evaluate(total_devices, n, m, kind, k, sched, v)
                 if choice is not None:
                     out.append(choice)
         # deterministic order: best speedup first, then smaller MP, then the
-        # cheaper-to-run kind, then fewer micro-batches
+        # cheaper-to-run kind, then fewer micro-batches; speedup ties between
+        # schedules (gpipe vs 1f1b at the same (M, K) are *exactly* equal)
+        # break toward the smaller per-device working set — more headroom at
+        # identical projected step time
         return sorted(out, key=lambda c: (-c.speedup, c.mp, c.mp_kind,
-                                          c.microbatches))
+                                          c.microbatches, c.mem_bytes,
+                                          c.schedule))
 
-    def _evaluate(self, total: int, n: int, m: int, kind: str,
-                  n_micro: int) -> Optional[PlannerChoice]:
-        mem_kind = kind if kind == "pipeline" else "tensor"
-        mem = per_device_mem_bytes(
-            self.cfg, mp=m, mp_kind=mem_kind, fsdp=1,
+    def _evaluate(self, total: int, n: int, m: int, kind: str, n_micro: int,
+                  sched: str = "-", v: int = 1) -> Optional[PlannerChoice]:
+        pipe = kind == "pipeline"
+        mem_kw = dict(
+            mp=m, mp_kind="pipeline" if pipe else "tensor",
             mini_batch=self.mini_batch, seq_len=self.seq_len,
-            opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat)
+            opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat,
+            microbatches=n_micro if pipe else 1,
+            schedule=sched if pipe else "gpipe",
+            virtual_stages=v if pipe else 1)
+        mem = per_device_mem_bytes(self.cfg, fsdp=1, **mem_kw)
         fsdp = False
         if mem > self.hw.hbm_bytes and n > 1:
-            mem = per_device_mem_bytes(
-                self.cfg, mp=m, mp_kind=mem_kind, fsdp=n,
-                mini_batch=self.mini_batch, seq_len=self.seq_len,
-                opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat)
+            mem = per_device_mem_bytes(self.cfg, fsdp=n, **mem_kw)
             fsdp = True
         if mem > self.hw.hbm_bytes:
             return None                           # pruned: does not fit
-        if kind == "pipeline":
-            su = speedup_pipeline(self.run, n, m, n_micro)
-            su_m = self.run.pipe_speedup.get((m, n_micro), 0.0)
+        if pipe:
+            su = speedup_pipeline(self.run, n, m, n_micro, sched)
+            su_m = self.run.pipe_speedup.get((m, n_micro, sched), 0.0)
         elif kind == "tensor":
             su = speedup_hybrid(self.run, n, m)
             su_m = self.run.mp_speedup.get(m, 1.0)
@@ -267,13 +324,17 @@ class HybridPlanner:
             dp_axes=dp_axes,
             model_axis="model" if m > 1 else None,
             fsdp_axes=dp_axes if fsdp else (),
-            mp_kind="pipeline" if kind == "pipeline" else "tensor",
-            microbatches=n_micro if kind == "pipeline" else 1,
+            mp_kind="pipeline" if pipe else "tensor",
+            microbatches=n_micro if pipe else 1,
+            schedule=sched if pipe else "gpipe",
+            virtual_stages=v if pipe else 1,
             remat=self.remat)
         mesh_shape = (pods, n // pods, m) if pods > 1 else (n, m)
         return PlannerChoice(
             pods=pods, dp=n // pods, mp=m, mp_kind=kind,
-            microbatches=n_micro if kind == "pipeline" else 1,
+            microbatches=n_micro if pipe else 1,
+            schedule=sched if pipe else "-",
+            virtual_stages=v if pipe else 1,
             speedup=su, su_m=su_m, se_n=self._se(n, m),
             epochs_ratio=self._eratio(n), mem_bytes=mem,
             mesh_shape=mesh_shape, plan=plan)

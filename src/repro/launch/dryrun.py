@@ -44,7 +44,8 @@ from repro.train.steps import (TrainState, _make_pctx, make_train_step,
 ADAFACTOR_ARCHS = {"kimi_k2_1t_a32b", "nemotron_4_340b"}
 
 
-def make_plan(arch: str, mesh, plan_name: str) -> ParallelPlan:
+def make_plan(arch: str, mesh, plan_name: str,
+              schedule: str = "gpipe") -> ParallelPlan:
     multi = "pod" in mesh.axis_names
     dp_axes = ("pod", "data") if multi else ("data",)
     fsdp = dp_axes if (plan_name == "optimized" or arch in ADAFACTOR_ARCHS) else ()
@@ -52,9 +53,13 @@ def make_plan(arch: str, mesh, plan_name: str) -> ParallelPlan:
     # ZeRO-3 "fsdp" addition; paper-faithful baseline for the rest keeps
     # params replicated across DP (sharded over model only)
     if plan_name == "pipeline":
-        # model axis carries GPipe stages instead of tensor shards (§4.4)
+        # model axis carries pipeline stages instead of tensor shards (§4.4);
+        # ShardingRules switches to stage-dim rules so memory_analysis
+        # reports per-stage parameter residency
         return ParallelPlan(dp_axes=dp_axes, model_axis="model",
                             mp_kind="pipeline", microbatches=4,
+                            schedule=schedule,
+                            virtual_stages=2 if schedule == "interleaved" else 1,
                             fsdp_axes=tuple(fsdp))
     return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp))
 
@@ -155,13 +160,13 @@ def _unrolled_variant(cfg, n_layers: int):
 
 def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
                   plan_name: str = "baseline", skip_analysis: bool = False,
-                  unroll_analysis: bool = True):
+                  unroll_analysis: bool = True, schedule: str = "gpipe"):
     """Run the dry-run for one (arch, shape, mesh) and return the record."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    plan = make_plan(arch, mesh, plan_name)
+    plan = make_plan(arch, mesh, plan_name, schedule=schedule)
     if plan.is_pipeline:
         # the 1-/2-layer unroll artifacts cannot be partitioned into the
         # 16-stage pipeline; per-layer cost deltas are tensor-plan-only
@@ -244,6 +249,9 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--plan", default="baseline",
                     choices=["baseline", "optimized", "pipeline"])
+    ap.add_argument("--sched", default="gpipe",
+                    choices=["gpipe", "1f1b", "interleaved"],
+                    help="pipeline schedule for --plan pipeline")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-analysis", action="store_true")
     args = ap.parse_args()
@@ -259,10 +267,12 @@ def main():
             for multi in meshes:
                 if args.plan == "pipeline":
                     # pipeline plans: train-mode only, and the 16-way model
-                    # axis must evenly partition the arch's layer stack
+                    # axis (x v chunks for interleaved) must evenly
+                    # partition the arch's layer stack
                     from repro.models.api import pipeline_applicable
+                    v = 2 if args.sched == "interleaved" else 1
                     if (INPUT_SHAPES[shape].kind != "train"
-                            or not pipeline_applicable(get_config(arch), 16)):
+                            or not pipeline_applicable(get_config(arch), 16, v)):
                         print(f"[skip] {arch}__{shape} (pipeline n/a)")
                         continue
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}__{args.plan}"
@@ -276,7 +286,8 @@ def main():
                     # analysis artifacts only needed on the single-pod mesh
                     rec = analyze_combo(arch, shape, multi_pod=multi,
                                         plan_name=args.plan,
-                                        skip_analysis=args.skip_analysis or multi)
+                                        skip_analysis=args.skip_analysis or multi,
+                                        schedule=args.sched)
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)
                     r = rec["roofline"]

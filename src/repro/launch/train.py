@@ -8,14 +8,18 @@
     python -m repro.launch.train --arch biglstm --parallel pipe=2,micro=4 \
         --reduced
 
-``--parallel auto`` invokes the paper's HybridPlanner — the 3-way search over
-DP x tensor-MP x pipeline-MP factorizations of the device budget (``--devices``,
-default 256) — and *executes* the winning plan: pipeline plans run through
-``parallel.pipeline.pipeline_apply`` on a mesh whose model axis carries the
-stages (on CPU the launcher forces that many host devices before jax
-initializes).  Explicit ``dp=/mp=/accum=`` or ``pipe=/micro=`` specs override
-the search.  ``--reduced`` shrinks the arch (2 layers, small dims) for the
-CPU container.
+``--parallel auto`` invokes the paper's HybridPlanner — the unified search
+over DP x tensor-MP x pipeline-MP x schedule factorizations of the device
+budget (``--devices``, default 256) — and *executes* the winning plan:
+pipeline plans run through ``parallel.pipeline.pipeline_apply`` on a
+**dp x stages mesh** — the model axis carries the stages, the data axis
+carries as much of the projected DP degree as the local machine affords
+(capped by ``--max-local-devices``, default 8, on CPU), with the batch
+sharded over it and the gradient all-reduce inserted by GSPMD.  On CPU the
+launcher forces dp*stages host devices before jax initializes.  Explicit
+``dp=/mp=/accum=`` or ``pipe=/micro=/sched=/v=/dp=`` specs override the
+search.  ``--reduced`` shrinks the arch (2 layers, small dims) for the CPU
+container.
 """
 from __future__ import annotations
 
@@ -29,10 +33,13 @@ from repro.parallel.plan import ParallelPlan
 
 
 def parse_parallel(spec: str, devices: int, cfg):
-    """Resolve a --parallel spec to (plan, mp_degree).
+    """Resolve a --parallel spec to (plan, mp_degree, dp_hint).
 
-    Pure planning — no jax device access, so the launcher can still force
-    host devices afterwards for pipeline execution.
+    ``dp_hint`` is the projected DP degree the launcher should realize (the
+    planner's pods*dp, or an explicit ``dp=`` key); the executable mesh
+    clamps it to the local machine.  Pure planning — no jax device access,
+    so the launcher can still force host devices afterwards for pipeline
+    execution.
     """
     from repro.models.api import supports_pipeline
 
@@ -50,23 +57,31 @@ def parse_parallel(spec: str, devices: int, cfg):
             print(f"[planner] best plan ({choices[0].mp_kind}) lacks runtime "
                   f"support for {cfg.name}; using next feasible choice")
         print(f"[planner] {choice.mesh_shape} kind={choice.mp_kind} "
-              f"micro={choice.microbatches} SU={choice.speedup:.1f} "
+              f"sched={choice.schedule} micro={choice.microbatches} "
+              f"SU={choice.speedup:.1f} "
               f"(SU^M={choice.su_m:.2f}, SE_N={choice.se_n:.3f}, "
               f"E1/EN={choice.epochs_ratio:.3f}, "
               f"mem={choice.mem_bytes / 2**30:.2f} GiB)")
-        return choice.plan, choice.mp
+        return choice.plan, choice.mp, choice.pods * choice.dp
     kv = dict(p.split("=") for p in spec.split(","))
     pipe = int(kv.get("pipe", 0))
     if pipe > 1:
+        sched = kv.get("sched", "gpipe")
+        v = int(kv.get("v", 2 if sched == "interleaved" else 1))
+        if (sched == "interleaved") != (v > 1):
+            raise SystemExit(
+                f"[plan] sched={sched} incompatible with v={v} "
+                f"(interleaved needs v>=2; gpipe/1f1b take v=1)")
         plan = ParallelPlan(dp_axes=("data",), model_axis="model",
                             mp_kind="pipeline",
-                            microbatches=int(kv.get("micro", 4)))
-        return plan, pipe
+                            microbatches=int(kv.get("micro", 4)),
+                            schedule=sched, virtual_stages=v)
+        return plan, pipe, int(kv.get("dp", 1))
     mp = int(kv.get("mp", 1))
     plan = ParallelPlan(dp_axes=("data",),
                         model_axis="model" if mp > 1 else None,
                         microbatches=int(kv.get("accum", 1)))
-    return plan, mp
+    return plan, mp, int(kv.get("dp", 1))
 
 
 def _ensure_host_devices(n: int):
@@ -93,33 +108,47 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--max-local-devices", type=int, default=8,
+                    help="cap on forced host devices for dp x stages "
+                         "pipeline execution on CPU")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     budget = args.devices or 256
-    plan, mp = parse_parallel(args.parallel, budget, cfg)
+    plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg)
 
-    # Pipeline plans need a real mesh axis with one device per stage; size
-    # the executable stage count to the local machine, then (on CPU) force
-    # that many host devices BEFORE any jax backend init below.
+    # Pipeline plans need a real mesh axis with one device per stage plus as
+    # much of the projected DP degree as fits locally; size the executable
+    # dp x stages mesh to the local machine, then (on CPU) force that many
+    # host devices BEFORE any jax backend init below.
     pipeline = plan.is_pipeline and mp > 1
+    dp = 1
     if pipeline:
         from repro.models.api import pipeline_applicable
-        if not pipeline_applicable(cfg, mp):
+        if not pipeline_applicable(cfg, mp, plan.virtual_stages):
             raise SystemExit(
-                f"[plan] {cfg.name}: {mp} pipeline stages need a supported "
-                f"arch with n_layers % stages == 0 (n_layers={cfg.n_layers})")
+                f"[plan] {cfg.name}: {mp} pipeline stages (x{max(plan.virtual_stages, 1)} "
+                f"chunks) need a supported arch with n_layers % (stages*v) "
+                f"== 0 (n_layers={cfg.n_layers})")
+        # realize as much DP as the local budget affords: dp must divide the
+        # batch (each micro-batch is sharded over the data axis)
+        dp_cap = min(max(dp_hint, 1), max(1, args.max_local_devices // mp))
+        dp = max(d for d in range(1, dp_cap + 1) if args.batch % d == 0)
+        if dp < dp_hint:
+            print(f"[plan] clamped DP {dp_hint} -> {dp} "
+                  f"(local budget {args.max_local_devices}, {mp} stages)")
         # the planner models micro-batches against its reference batch; the
-        # executed run must use a count that divides the actual --batch
-        micro = max(k for k in range(1, min(plan.microbatches, args.batch) + 1)
-                    if args.batch % k == 0)
+        # executed run must use a count that divides the per-dp-shard batch
+        shard_b = args.batch // dp
+        micro = max(k for k in range(1, min(plan.microbatches, shard_b) + 1)
+                    if shard_b % k == 0)
         if micro != plan.microbatches:
             print(f"[plan] clamped micro-batches {plan.microbatches} -> "
-                  f"{micro} (batch={args.batch})")
+                  f"{micro} (batch={args.batch}, dp={dp})")
             plan = dataclasses.replace(plan, microbatches=micro)
-        _ensure_host_devices(mp)
+        _ensure_host_devices(dp * mp)
 
     import jax
     import numpy as np
@@ -133,12 +162,13 @@ def main():
     from repro.train.steps import (init_train_state, make_train_step)
 
     if pipeline:
-        if jax.device_count() < mp:
-            raise SystemExit(f"[mesh] pipeline plan needs {mp} devices, have "
-                             f"{jax.device_count()} (jax initialized early?)")
-        mesh = make_mesh(dp=1, mp=mp)
-        # DP collapses to the local mesh: drop pod axes / fsdp from the
-        # projected plan, keep the pipeline stages + micro-batch count
+        if jax.device_count() < dp * mp:
+            raise SystemExit(f"[mesh] pipeline plan needs {dp * mp} devices, "
+                             f"have {jax.device_count()} "
+                             f"(jax initialized early?)")
+        mesh = make_mesh(dp=dp, mp=mp)
+        # DP narrows to the local mesh's data axis: drop pod axes / fsdp
+        # from the projected plan, keep stages + schedule + micro-batches
         plan = dataclasses.replace(plan, dp_axes=("data",), fsdp_axes=())
     else:
         mesh = make_host_mesh()
@@ -153,7 +183,17 @@ def main():
     pctx = None
     train_step = make_train_step(api, opt, mesh=mesh, plan=plan, pctx=pctx)
     state = init_train_state(api, opt, jax.random.PRNGKey(0))
-    train_step = jax.jit(train_step, donate_argnums=(0,))
+    if pipeline and dp > 1:
+        # dp x stages: batch sharded over the data axis, params/opt
+        # replicated — GSPMD inserts the gradient all-reduce over "data"
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        state_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+        batch_sh = {"tokens": NamedSharding(mesh, P("data", None)),
+                    "labels": NamedSharding(mesh, P("data", None))}
+        train_step = jax.jit(train_step, donate_argnums=(0,),
+                             in_shardings=(state_sh, batch_sh))
+    else:
+        train_step = jax.jit(train_step, donate_argnums=(0,))
 
     def epoch_fn(e):
         def gen():

@@ -83,8 +83,9 @@ class ModelApi:
     loss_fn: Callable                 # (params, batch, pctx) -> (loss, metrics)
     prefill: Optional[Callable]       # (params, batch, pctx, capacity, window) -> (logits, cache)
     decode_fn: Optional[Callable]     # (params, cache, batch, pctx, window) -> (logits, cache)
-    # (params, batch, mesh=, axis=, n_micro=) -> (loss, metrics); set for the
-    # archs whose layer stack the GPipe runtime can partition into stages
+    # (params, batch, mesh=, axis=, n_micro=, schedule=, virtual_stages=,
+    # batch_axes=) -> (loss, metrics); set for the archs whose layer stack
+    # the pipeline runtime can partition into stages
     pipeline_loss_fn: Optional[Callable] = None
 
     def input_specs(self, shape: InputShape, *, reduced: bool = False) -> Dict[str, Any]:
@@ -187,10 +188,12 @@ def supports_pipeline(cfg: ModelConfig) -> bool:
     return not (cfg.encoder_layers or cfg.n_prefix_embeds or cfg.is_moe)
 
 
-def pipeline_applicable(cfg: ModelConfig, n_stages: int) -> bool:
-    """Can this arch run as ``n_stages`` pipeline stages at runtime?"""
+def pipeline_applicable(cfg: ModelConfig, n_stages: int,
+                        virtual_stages: int = 1) -> bool:
+    """Can this arch run as ``n_stages`` pipeline stages (each holding
+    ``virtual_stages`` interleaved layer chunks) at runtime?"""
     return (supports_pipeline(cfg) and n_stages > 1
-            and cfg.n_layers % n_stages == 0)
+            and cfg.n_layers % (n_stages * max(virtual_stages, 1)) == 0)
 
 
 def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
@@ -229,9 +232,12 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 
-        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro):
+        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro,
+                         schedule="gpipe", virtual_stages=1, batch_axes=()):
             logits = lstm_mod.biglstm_forward_pipeline(
-                cfg, params, batch, mesh=mesh, axis=axis, n_micro=n_micro)
+                cfg, params, batch, mesh=mesh, axis=axis, n_micro=n_micro,
+                schedule=schedule, virtual_stages=virtual_stages,
+                batch_axes=batch_axes)
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 
@@ -273,11 +279,13 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
 
     pipe_loss_fn = None
     if supports_pipeline(cfg):
-        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro):
+        def pipe_loss_fn(params, batch, *, mesh, axis, n_micro,
+                         schedule="gpipe", virtual_stages=1, batch_axes=()):
             fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
             logits = tf_mod.forward_pipeline(
                 cfg, params, fwd_batch, mesh=mesh, axis=axis, n_micro=n_micro,
-                remat=remat, rwkv_chunked=rwkv_chunked)
+                remat=remat, rwkv_chunked=rwkv_chunked, schedule=schedule,
+                virtual_stages=virtual_stages, batch_axes=batch_axes)
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 

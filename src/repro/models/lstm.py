@@ -20,8 +20,22 @@ from repro.parallel.pipeline import pipeline_apply, stack_to_stages
 
 def stack_layer_params(layer_list):
     """Homogeneous per-layer param dicts -> one stacked (L, ...) pytree, the
-    layout ``parallel.pipeline.stack_to_stages`` partitions into stages."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *layer_list)
+    layout ``parallel.pipeline.stack_to_stages`` partitions into stages.
+
+    Stacks via dynamic-update-slice rather than ``jnp.stack``: on jax 0.4.x
+    a ``concatenate`` feeding a ``shard_map`` operand miscompiles under the
+    SPMD partitioner when the mesh has an axis the in_specs do not mention
+    (the dp axis of a dp x stages mesh) — the assembled output gets an
+    erroneous cross-replica reduction.  DUS takes the same layout without
+    tripping that path; see test_pipeline_dp_stages_grads_equal_pure_dp.
+    """
+    def stack(*xs):
+        out = jnp.zeros((len(xs),) + xs[0].shape, xs[0].dtype)
+        for i, x in enumerate(xs):
+            out = jax.lax.dynamic_update_slice_in_dim(out, x[None], i, 0)
+        return out
+
+    return jax.tree.map(stack, *layer_list)
 
 
 def lstm_cell_init(key, d_in: int, d_h: int, d_proj: int = 0, dtype=jnp.float32):
@@ -135,15 +149,19 @@ def biglstm_forward(cfg, params, batch):
 
 
 def biglstm_forward_pipeline(cfg, params, batch, *, mesh, axis: str,
-                             n_micro: int):
-    """BigLSTM forward with the residual LSTM stack partitioned into GPipe
-    stages over mesh ``axis`` — the paper's §4.4 MP implementation for the
-    RNN models, streaming ``n_micro`` micro-batches through the stages.
-    Bit-equal (fp32) to ``biglstm_forward``; embed/softmax stay replicated."""
+                             n_micro: int, schedule: str = "gpipe",
+                             virtual_stages: int = 1, batch_axes=()):
+    """BigLSTM forward with the residual LSTM stack partitioned into
+    pipeline stages over mesh ``axis`` — the paper's §4.4 MP implementation
+    for the RNN models, streaming ``n_micro`` micro-batches through the
+    stages under the requested ``schedule`` while ``batch_axes`` carries the
+    data parallelism.  Bit-equal (fp32) to ``biglstm_forward``;
+    embed/softmax stay replicated."""
     dt = jnp.dtype(cfg.dtype)
     x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
     n_stages = mesh.shape[axis]
-    stages = stack_to_stages(stack_layer_params(params["lstm"]), n_stages)
+    stages = stack_to_stages(stack_layer_params(params["lstm"]), n_stages,
+                             virtual_stages)
 
     def stage_fn(sp, x):
         def body(x, lp):
@@ -153,5 +171,7 @@ def biglstm_forward_pipeline(cfg, params, batch, *, mesh, axis: str,
         x, _ = jax.lax.scan(body, x, sp)
         return x
 
-    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro)
+    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro,
+                       schedule=schedule, virtual_stages=virtual_stages,
+                       batch_axes=batch_axes)
     return x @ params["head"].astype(dt)

@@ -551,18 +551,21 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
 
 def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
                      remat: bool = True, rwkv_chunked: bool = False,
-                     window_override=None):
-    """Train-mode forward with the decoder stack partitioned into GPipe
+                     window_override=None, schedule: str = "gpipe",
+                     virtual_stages: int = 1, batch_axes=()):
+    """Train-mode forward with the decoder stack partitioned into pipeline
     stages over mesh ``axis`` (``parallel.pipeline``), ``n_micro``
-    micro-batches in flight.  Supported for homogeneous decoder-only stacks
-    (no encoder, no prefix embeds, no MoE aux loss); embed and head stay
-    replicated on every stage.  Returns logits only."""
+    micro-batches in flight under the requested ``schedule``; ``batch_axes``
+    shards each micro-batch over the DP mesh axes.  Supported for
+    homogeneous decoder-only stacks (no encoder, no prefix embeds, no MoE
+    aux loss); embed and head stay replicated on every stage.  Returns
+    logits only."""
     from repro.parallel.pipeline import pipeline_apply, stack_to_stages
 
     window = cfg.sliding_window if window_override is None else window_override
     x = _embed(cfg, params, batch["tokens"])
     n_stages = mesh.shape[axis]
-    stages = stack_to_stages(params["layers"], n_stages)
+    stages = stack_to_stages(params["layers"], n_stages, virtual_stages)
 
     def stage_fn(sp, x):
         def body(x, lp):
@@ -575,7 +578,9 @@ def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
         x, _ = jax.lax.scan(body, x, sp)
         return x
 
-    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro)
+    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro,
+                       schedule=schedule, virtual_stages=virtual_stages,
+                       batch_axes=batch_axes)
     return _head(cfg, params, x)
 
 

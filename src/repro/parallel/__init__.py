@@ -1,7 +1,12 @@
 from repro.parallel.plan import ParallelPlan, plan_degrees
-from repro.parallel.pipeline import (pipeline_apply, pipeline_step_speedup,
-                                     stack_to_stages)
+from repro.parallel.pipeline import (PipelineSchedule, SCHEDULE_KINDS,
+                                     make_schedule,
+                                     pipeline_activation_residency,
+                                     pipeline_apply, pipeline_bubble_fraction,
+                                     pipeline_step_speedup, stack_to_stages)
 from repro.parallel.sharding import ShardingRules
 
-__all__ = ["ParallelPlan", "plan_degrees", "pipeline_apply",
+__all__ = ["ParallelPlan", "plan_degrees", "PipelineSchedule",
+           "SCHEDULE_KINDS", "make_schedule", "pipeline_apply",
+           "pipeline_bubble_fraction", "pipeline_activation_residency",
            "pipeline_step_speedup", "stack_to_stages", "ShardingRules"]

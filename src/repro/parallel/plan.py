@@ -22,8 +22,12 @@ class ParallelPlan:
     fsdp_axes: Tuple[str, ...] = ()        # params/opt additionally sharded here
     mp_kind: str = "tensor"                # "tensor" | "pipeline"
     # For mp_kind="tensor": delayed-gradient accumulation count (§4.2).
-    # For mp_kind="pipeline": GPipe micro-batches fed through the stages.
+    # For mp_kind="pipeline": pipeline micro-batches fed through the stages.
     microbatches: int = 1
+    # Pipeline schedule ("gpipe" | "1f1b" | "interleaved") and, for
+    # interleaved, the virtual layer chunks per device (v).
+    schedule: str = "gpipe"
+    virtual_stages: int = 1
     remat: bool = True
 
     @property
@@ -36,7 +40,11 @@ class ParallelPlan:
             dp *= mesh.shape[a]
         mp = mesh.shape[self.model_axis] if self.model_axis else 1
         unit = "micro" if self.is_pipeline else "accum"
-        return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP"
+        sched = ""
+        if self.is_pipeline:
+            v = f" v={self.virtual_stages}" if self.virtual_stages > 1 else ""
+            sched = f" [{self.schedule}{v}]"
+        return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP{sched}"
                 f"{' +fsdp' if self.fsdp_axes else ''}"
                 f"{f' x{self.microbatches} {unit}' if self.microbatches > 1 else ''}")
 

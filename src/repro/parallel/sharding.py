@@ -5,6 +5,11 @@ Implements the Megatron-style tensor-MP decomposition per architecture family
 axis, with automatic fallback to replication whenever a dim is not divisible
 by the axis size (e.g. smollm's 15 heads on a 16-way axis), and optional
 ZeRO-style sharding of the remaining large dim over the DP axes.
+
+Pipeline plans (``plan.is_pipeline``) switch to **stage-dim** rules instead:
+the stacked layer dim is sharded over the model axis (per-stage parameter
+residency, matching ``parallel.pipeline.stack_to_stages``), embed/head stay
+replicated across stages.
 """
 from __future__ import annotations
 
@@ -75,11 +80,37 @@ class ShardingRules:
         names = [p for p in path]
         name = names[-1]
         stacked = "layers" in names  # leading L dim from scan-stacking
+        if self.plan.is_pipeline:
+            return self._pipeline_spec(stacked, shape)
         core = shape[1:] if stacked else shape
         spec = self._leaf_spec_core(names, name, core)
         if stacked:
             spec = P(None, *spec)
         return spec
+
+    def _pipeline_spec(self, stacked: bool, shape: Tuple[int, ...]):
+        """Pipeline plans shard by **stage residency**, not tensor-MP dims:
+        the stacked layer dim splits into contiguous blocks of L/S layers
+        per stage (exactly the ``stack_to_stages`` v=1 layout), so the model
+        axis shards dim 0 of every stacked leaf — ``memory_analysis`` then
+        reports per-stage parameter residency instead of naively replicating
+        (or tensor-sharding) the whole stack on every stage.  Embed/head and
+        non-divisible stacks stay replicated across stages; ZeRO/fsdp over
+        the DP axes still applies to a remaining divisible dim."""
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        lo = 0
+        if stacked and self.ms and self.msz > 1 and shape[0] % self.msz == 0:
+            spec[0] = self.ms
+            lo = 1
+        if self.fs and self.fsz > 1:
+            for i in range(nd - 1, lo - 1, -1):      # prefer trailing dims
+                if shape[i] % self.fsz == 0:
+                    spec[i] = self.fs
+                    break
+        return P(*spec)
 
     def _leaf_spec_core(self, names, name, shape):
         cfg = self.cfg

@@ -72,10 +72,18 @@ def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
     micro = 1 if pipelined else plan.microbatches
 
     if pipelined:
+        # dp x stages: the mesh's DP axes shard each micro-batch inside the
+        # pipeline shard_map; the gradient psum over them is GSPMD's
+        batch_axes = tuple(a for a in plan.dp_axes
+                           if mesh.shape.get(a, 1) > 1)
+
         def loss_fn(params, batch):
             return api.pipeline_loss_fn(params, batch, mesh=mesh,
                                         axis=plan.model_axis,
-                                        n_micro=max(plan.microbatches, 1))
+                                        n_micro=max(plan.microbatches, 1),
+                                        schedule=plan.schedule,
+                                        virtual_stages=plan.virtual_stages,
+                                        batch_axes=batch_axes)
     else:
         def loss_fn(params, batch):
             return api.loss_fn(params, batch, pctx)

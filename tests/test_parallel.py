@@ -178,11 +178,12 @@ def test_moe_ep_shard_map_equals_local():
     """)
 
 
-@pytest.mark.parametrize("stages", [2, 4, 8])
-def test_pipeline_equals_sequential(stages):
-    """Bit-exactness of the GPipe runtime vs sequential stacking (fp32) over
-    a (stages x n_micro) grid — every micro-batch count that divides the
-    batch, for every stage count that divides the layer stack."""
+@pytest.mark.parametrize("stages", [2, 4])
+def test_pipeline_schedules_equal_sequential(stages):
+    """Bit-exactness of the schedule-generic runtime vs sequential stacking
+    (fp32) over the {gpipe, 1f1b, interleaved} x stages x {2, 4, 8} micro
+    grid (ISSUE 2 satellite): every schedule must produce identical outputs
+    — they reorder/replace the placement, never the math."""
     out = _run_subprocess(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -192,7 +193,7 @@ def test_pipeline_equals_sequential(stages):
 
         stages = {stages}
         mesh = make_mesh((1, stages), ("data", "model"))
-        L, d, B = 8, 16, 12
+        L, d, B = 8, 16, 16
         key = jax.random.PRNGKey(0)
         params = {{"w": jax.random.normal(key, (L, d, d)) * 0.1,
                    "b": jnp.zeros((L, d))}}
@@ -207,15 +208,176 @@ def test_pipeline_equals_sequential(stages):
 
         y_ref, _ = jax.lax.scan(lambda x, lp: (layer(lp, x), None), x, params)
         with set_mesh(mesh):
-            for n_micro in (1, 2, 3, 6, 12):
-                y = pipeline_apply(mesh, "model", stage_fn,
-                                   stack_to_stages(params, stages), x,
-                                   n_micro=n_micro)
-                err = float(jnp.abs(y - y_ref).max())
-                assert err < 1e-6, (stages, n_micro, err)
-                print("OK", stages, n_micro, err)
+            for sched in ("gpipe", "1f1b", "interleaved"):
+                v = 2 if sched == "interleaved" else 1
+                for n_micro in (2, 4, 8):
+                    y = pipeline_apply(mesh, "model", stage_fn,
+                                       stack_to_stages(params, stages, v), x,
+                                       n_micro=n_micro, schedule=sched,
+                                       virtual_stages=v)
+                    err = float(jnp.abs(y - y_ref).max())
+                    assert err < 1e-6, (sched, stages, n_micro, err)
+                    print("OK", sched, stages, n_micro, err)
     """)
-    assert out.count("OK") == 5
+    assert out.count("OK") == 9
+
+
+def test_pipeline_dp_stages_grads_equal_pure_dp():
+    """dp x stages execution (the ISSUE 2 tentpole wiring): a pipeline plan
+    on a 2x2 host mesh — batch sharded over "data", stages over "model" —
+    must reproduce pure-DP loss AND parameter gradients (fp32) exactly."""
+    _run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.jaxcompat import make_mesh, set_mesh
+        from repro.configs import get_config
+        from repro.models.api import build_model
+
+        cfg = get_config("biglstm").reduced()
+        api = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = api.init(key)
+        batch = {"tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab_size, dtype=jnp.int32),
+                 "labels": jax.random.randint(key, (8, 16), 0, cfg.vocab_size, dtype=jnp.int32)}
+        mesh = make_mesh((2, 2), ("data", "model"))
+        b_sh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+        p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+
+        def dp_loss(p, b):
+            return api.loss_fn(p, b)[0]
+
+        def pipe_loss(p, b):
+            return api.pipeline_loss_fn(p, b, mesh=mesh, axis="model",
+                                        n_micro=2, schedule="1f1b",
+                                        batch_axes=("data",))[0]
+
+        with set_mesh(mesh):
+            ref_l, ref_g = jax.jit(jax.value_and_grad(dp_loss),
+                                   in_shardings=(p_sh, b_sh))(params, batch)
+            out_l, out_g = jax.jit(jax.value_and_grad(pipe_loss),
+                                   in_shardings=(p_sh, b_sh))(params, batch)
+        err_l = abs(float(ref_l) - float(out_l))
+        errs = jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()), ref_g, out_g)
+        err_g = max(jax.tree.leaves(errs))
+        assert err_l < 1e-6 and err_g < 1e-6, (err_l, err_g)
+        print("OK", err_l, err_g)
+    """)
+
+
+def test_pipeline_output_broadcast_bytes():
+    """ISSUE 2 satellite: the old runtime psum'd the FULL outs buffer over
+    every stage each step; the new single-source slice must compile to
+    strictly fewer collective wire bytes (and no all-reduce of outs-sized
+    operands at all)."""
+    _run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from repro.core.roofline import parse_collectives
+        from repro.parallel.jaxcompat import make_mesh, set_mesh
+        from repro.parallel.pipeline import pipeline_apply, stack_to_stages
+
+        stages, L, d, B, n_micro = 4, 8, 32, 16, 4
+        mesh = make_mesh((1, stages), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(key, (L, d, d)) * 0.1,
+                  "b": jnp.zeros((L, d))}
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+
+        def stage_fn(sp, x):
+            y, _ = jax.lax.scan(
+                lambda x, lp: (jnp.tanh(x @ lp["w"] + lp["b"]), None), x, sp)
+            return y
+
+        stacked = stack_to_stages(params, stages)
+
+        def run(replicate_out):
+            def f(p, x):
+                return pipeline_apply(mesh, "model", stage_fn, p, x,
+                                      n_micro=n_micro,
+                                      replicate_out=replicate_out).sum()
+            with set_mesh(mesh):
+                comp = jax.jit(f).lower(stacked, x).compile()
+            return parse_collectives(comp.as_text(), default_group=stages)
+
+        new, old = run(False), run(True)
+        outs_bytes = B * d * 4
+        # the legacy path all-reduces the full (n_micro, mb, d) buffer
+        assert old.ops.get("all-reduce", 0) >= 1, old.ops
+        assert old.wire_bytes >= outs_bytes, (old.wire_bytes, outs_bytes)
+        saved = old.wire_bytes - new.wire_bytes
+        assert saved > 0, (old.wire_bytes, new.wire_bytes)
+        print("OK saved", saved, "of", old.wire_bytes)
+    """)
+
+
+def test_dryrun_pipeline_lane_stage_sharding():
+    """The dryrun ``--plan pipeline`` lane (ISSUE 2 satellite): stage-dim
+    sharding rules must put the stacked layer dim of every decoder-stack
+    leaf on the model axis (per-stage parameter residency) and keep
+    tensor-MP dims unsharded, and the lane itself must lower+compile."""
+    import jax as _jax
+    from repro.launch.dryrun import make_plan
+    cfg = get_config("llama3_2_1b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    plan = ParallelPlan(dp_axes=("data",), model_axis="model",
+                        mp_kind="pipeline", microbatches=4)
+    rules = ShardingRules(cfg, mesh, plan)
+    api = build_model(cfg)
+    params_shape = _jax.eval_shape(api.init, _jax.random.PRNGKey(0))
+    specs = rules.params_specs(params_shape)
+    flat_p, _ = _jax.tree_util.tree_flatten_with_path(params_shape)
+    flat_s = _jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, _jax.sharding.PartitionSpec))
+    n_stage_sharded = 0
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        keys = [getattr(p, "key", None) for p in path]
+        if "layers" in keys:
+            assert tuple(spec)[0] == "model", (path, spec)   # stage residency
+            assert "model" not in tuple(spec)[1:], (path, spec)
+            n_stage_sharded += 1
+        else:
+            assert "model" not in tuple(spec), (path, spec)  # replicated
+    assert n_stage_sharded > 0
+
+
+@pytest.mark.slow
+def test_dryrun_pipeline_lane_compiles():
+    """End-to-end pipeline dry-run lane on the production 16x16 mesh."""
+    out = _run_subprocess("""
+        import sys
+        sys.argv = ["dryrun", "--arch", "llama3_2_1b", "--shape", "train_4k",
+                    "--mesh", "single", "--plan", "pipeline",
+                    "--sched", "1f1b", "--out", "/tmp/dryrun_pipe_test",
+                    "--skip-analysis"]
+        import shutil
+        shutil.rmtree("/tmp/dryrun_pipe_test", ignore_errors=True)
+        from repro.launch.dryrun import main
+        rc = main()
+        assert rc == 0
+    """)
+    assert "1 ok, 0 failed" in out
+
+
+def test_pipeline_apply_rejects_chunk_layout_mismatch():
+    """A stage-params layout stacked for a different chunk count than the
+    schedule's (normalized) v must raise, not silently apply the wrong
+    layers — e.g. ``sched=gpipe`` with a v=2 stack would only ever run
+    chunk 0."""
+    import jax.numpy as jnp
+    from repro.parallel.jaxcompat import make_mesh
+    from repro.parallel.pipeline import pipeline_apply, stack_to_stages
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = {"w": jnp.zeros((2, 3, 3))}
+    x = jnp.zeros((4, 3))
+    with pytest.raises(ValueError, match="stack_to_stages"):
+        pipeline_apply(mesh, "model", lambda p, x: x,
+                       stack_to_stages(params, 1, 2), x, n_micro=2,
+                       schedule="gpipe")
 
 
 def test_biglstm_pipeline_loss_equals_sequential():

@@ -1,31 +1,40 @@
-"""Golden regression pins for the 3-way planner on the paper's three archs.
+"""Golden regression pins for the unified planner on the paper's three archs.
 
 These values ARE expected to move when the cost model changes — that is the
-point: any edit to the tensor/pipeline SU^M models, the SE_N comm model, the
-epoch-inflation prior, or the memory filter surfaces here as a visible,
-reviewable diff instead of silently reshaping every downstream projection.
-Update the table deliberately, alongside the cost-model change.
+point: any edit to the tensor/pipeline SU^M models, the pipeline-schedule
+bubble/memory models, the SE_N comm model, the epoch-inflation prior, or the
+memory filter surfaces here as a visible, reviewable diff instead of silently
+reshaping every downstream projection.  Update the table deliberately,
+alongside the cost-model change.
 
 Settings pinned to the planner defaults used by ``--parallel auto``:
 ``default_epoch_model``, mini_batch=16, seq_len=4096, TPU-v5e HardwareModel,
-se_perfect=False.
+se_perfect=False, micro candidates (2, 4, 8, 16), schedules searched
+(gpipe / 1f1b / interleaved v=2).
+
+History: the schedule dimension (this PR) moved the RNN archs from
+(gpipe, K=8) to (1f1b, K=16) — 1f1b's min(K, S) activation residency makes
+K=16 the memory-cheapest point at the identical projected step time, and
+the larger K shrinks the bubble (gnmt 4-stage: 3/11 -> 3/19).
 """
 import pytest
 
 from repro.configs import get_config
-from repro.core.planner import HybridPlanner, default_epoch_model
+from repro.core.planner import (HybridPlanner, default_epoch_model,
+                                per_device_mem_bytes)
+from repro.parallel.pipeline import SCHEDULE_KINDS
 
-# (arch, devices) -> (mp_kind, pods, dp, mp, microbatches, speedup)
+# (arch, devices) -> (mp_kind, pods, dp, mp, microbatches, schedule, speedup)
 GOLDEN = {
-    ("inception_v3", 64): ("none", 1, 64, 1, 1, 1.4207),
-    ("inception_v3", 256): ("tensor", 1, 8, 32, 1, 0.774818),
-    ("inception_v3", 1024): ("tensor", 4, 8, 32, 1, 0.435361),
-    ("gnmt", 64): ("pipeline", 1, 16, 4, 8, 15.0249),
-    ("gnmt", 256): ("pipeline", 1, 64, 4, 8, 5.45537),
-    ("gnmt", 1024): ("pipeline", 4, 64, 4, 8, 1.40307),
-    ("biglstm", 64): ("pipeline", 1, 32, 2, 8, 34.1723),
-    ("biglstm", 256): ("pipeline", 1, 128, 2, 8, 19.685),
-    ("biglstm", 1024): ("pipeline", 4, 128, 2, 8, 5.35752),
+    ("inception_v3", 64): ("none", 1, 64, 1, 1, "-", 1.420695),
+    ("inception_v3", 256): ("tensor", 1, 8, 32, 1, "-", 0.774818),
+    ("inception_v3", 1024): ("tensor", 4, 8, 32, 1, "-", 0.435361),
+    ("gnmt", 64): ("pipeline", 1, 16, 4, 16, "1f1b", 17.395472),
+    ("gnmt", 256): ("pipeline", 1, 64, 4, 16, "1f1b", 6.316095),
+    ("gnmt", 1024): ("pipeline", 4, 64, 4, 16, "1f1b", 1.624438),
+    ("biglstm", 64): ("pipeline", 1, 32, 2, 16, "1f1b", 36.182307),
+    ("biglstm", 256): ("pipeline", 1, 128, 2, 16, "1f1b", 20.842839),
+    ("biglstm", 1024): ("pipeline", 4, 128, 2, 16, "1f1b", 5.672646),
 }
 
 
@@ -34,13 +43,14 @@ def test_planner_golden_choices(arch):
     cfg = get_config(arch)
     planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
     for devices in (64, 256, 1024):
-        kind, pods, dp, mp, micro, speedup = GOLDEN[(arch, devices)]
+        kind, pods, dp, mp, micro, sched, speedup = GOLDEN[(arch, devices)]
         best = planner.best(devices)
-        got = (best.mp_kind, best.pods, best.dp, best.mp, best.microbatches)
-        assert got == (kind, pods, dp, mp, micro), (
+        got = (best.mp_kind, best.pods, best.dp, best.mp, best.microbatches,
+               best.schedule)
+        assert got == (kind, pods, dp, mp, micro, sched), (
             f"{arch}@{devices}: planner now picks {got}, golden is "
-            f"{(kind, pods, dp, mp, micro)} — if the cost-model change is "
-            f"intentional, update GOLDEN")
+            f"{(kind, pods, dp, mp, micro, sched)} — if the cost-model "
+            f"change is intentional, update GOLDEN")
         assert best.speedup == pytest.approx(speedup, rel=1e-3), (
             f"{arch}@{devices}: projected SU moved")
 
@@ -55,3 +65,54 @@ def test_paper_rnn_archs_pipeline_at_scale():
             best = planner.best(devices)
             assert best.mp_kind == "pipeline", (arch, devices, best)
             assert best.plan.is_pipeline and best.plan.microbatches > 1
+
+
+def test_planner_selects_non_gpipe_schedule():
+    """With the schedule dimension searched, the arg-max for the paper's RNN
+    archs is a non-GPipe schedule: 1f1b matches gpipe's projected step time
+    at every (M, K) but holds min(K, S) instead of K micro-batch activations,
+    so the tie breaks toward it and larger K become the cheapest points."""
+    for arch in ("gnmt", "biglstm"):
+        cfg = get_config(arch)
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+        for devices in (64, 256):
+            best = planner.best(devices)
+            assert best.mp_kind == "pipeline", (arch, devices)
+            assert best.schedule != "gpipe", (arch, devices, best.schedule)
+            assert best.schedule in SCHEDULE_KINDS
+
+
+def _max_feasible_micro(cfg, schedule, stages, hbm, *, mini_batch=64,
+                        seq_len=4096, remat=False):
+    best = 0
+    for k in (2, 4, 8, 16, 32, 64):
+        if mini_batch % k:
+            continue
+        mem = per_device_mem_bytes(
+            cfg, mp=stages, mp_kind="pipeline", fsdp=1,
+            mini_batch=mini_batch, seq_len=seq_len, remat=remat,
+            microbatches=k, schedule=schedule)
+        if mem <= hbm:
+            best = max(best, k)
+    return best
+
+
+@pytest.mark.parametrize("arch", ["gnmt", "biglstm", "llama3_2_1b"])
+def test_1f1b_feasible_micro_count_dominates_gpipe(arch):
+    """Planner invariant: at every memory budget, 1F1B's max feasible
+    micro-batch count >= GPipe's (its activation residency min(K, S) <= K),
+    and there exists a budget where it is strictly larger."""
+    cfg = get_config(arch)
+    stages = 2
+    base = per_device_mem_bytes(
+        cfg, mp=stages, mp_kind="pipeline", fsdp=1, mini_batch=64,
+        seq_len=4096, remat=False, microbatches=2, schedule="gpipe")
+    strictly = False
+    for frac in (0.5, 0.6, 0.8, 0.9, 1.0, 1.2, 1.5, 2.0):
+        hbm = base * frac
+        kg = _max_feasible_micro(cfg, "gpipe", stages, hbm)
+        kf = _max_feasible_micro(cfg, "1f1b", stages, hbm)
+        assert kf >= kg, (arch, frac, kg, kf)
+        if kf > kg:
+            strictly = True
+    assert strictly, f"{arch}: no budget where 1f1b strictly unlocks micros"

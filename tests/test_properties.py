@@ -118,9 +118,14 @@ def test_planner_choices_factorize_budget(arch):
             if c.mp_kind == "pipeline":
                 assert c.plan.mp_kind == "pipeline"
                 assert c.plan.microbatches == c.microbatches > 1
-                assert cfg.n_layers % c.mp == 0, (arch, c.mp)
+                assert c.plan.schedule == c.schedule in (
+                    "gpipe", "1f1b", "interleaved")
+                assert c.plan.virtual_stages == c.virtual_stages
+                assert (c.virtual_stages > 1) == (c.schedule == "interleaved")
+                assert cfg.n_layers % (c.mp * c.virtual_stages) == 0, (arch, c)
             else:
                 assert c.microbatches == 1
+                assert c.schedule == "-" and c.virtual_stages == 1
                 assert c.plan.mp_kind == "tensor"
 
 
@@ -147,7 +152,10 @@ def test_planner_memory_feasibility(arch):
                 cfg, mp=c.mp,
                 mp_kind="pipeline" if c.mp_kind == "pipeline" else "tensor",
                 fsdp=1, mini_batch=pl.mini_batch, seq_len=pl.seq_len,
-                opt_bytes_per_param=pl.opt_bytes_per_param, remat=pl.remat)
+                opt_bytes_per_param=pl.opt_bytes_per_param, remat=pl.remat,
+                microbatches=c.microbatches,
+                schedule=c.schedule if c.mp_kind == "pipeline" else "gpipe",
+                virtual_stages=c.virtual_stages)
             if c.plan.fsdp_axes:
                 assert mem_plain > hbm, (arch, d, c)     # fsdp was needed
             else:

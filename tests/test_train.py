@@ -112,10 +112,13 @@ def test_checkpoint_roundtrip(tmp_path):
 def test_pipeline_auto_plan_trains_end_to_end():
     """Planner -> runtime integration: ``--parallel auto`` on biglstm must
     arg-max to a ``mp_kind="pipeline"`` plan (the paper's §4.4 MP for the
-    RNNs) and train 3 steps through ``pipeline_apply`` on a forced 2-device
-    host mesh.  Runs the real CLI in a subprocess so the forced device count
-    does not leak into this pytest process."""
+    RNNs) and train 3 steps through ``pipeline_apply`` on a forced
+    **dp x stages** host mesh with dp > 1 — the hybrid DP x pipeline-MP
+    execution the paper's thesis needs (DP no longer collapses to 1).
+    Runs the real CLI in a subprocess so the forced device count does not
+    leak into this pytest process."""
     import os
+    import re
     import subprocess
     import sys
 
@@ -130,6 +133,10 @@ def test_pipeline_auto_plan_trains_end_to_end():
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     assert "kind=pipeline" in r.stdout, r.stdout      # planner chose pipeline
     assert "pipeline MP" in r.stdout, r.stdout        # runtime executed it
+    m = re.search(r"\[plan\] (\d+)-way DP x (\d+)-way pipeline MP", r.stdout)
+    assert m, r.stdout                                # executed-plan banner
+    assert int(m.group(1)) > 1, r.stdout              # real DP, dp x stages
+    assert int(m.group(2)) > 1, r.stdout
     assert "final_loss=" in r.stdout, r.stdout        # 3 steps completed
     loss = float(r.stdout.split("final_loss=")[1].split()[0])
     assert np.isfinite(loss), loss
