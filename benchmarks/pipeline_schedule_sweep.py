@@ -9,19 +9,27 @@ and emits ``BENCH_pipeline.json`` with
 - per-point measured step time (min over reps) next to the schedule's
   analytic bubble fraction / activation residency / tick counts — the perf
   trajectory seed;
+- a **runtime lane** per point: the same (schedule, K) executed by both
+  pipeline runtimes — ``ad`` (jax.grad through ``pipeline_apply``'s forward
+  scan) and ``scheduled`` (``pipeline_value_and_grad``, the hand-scheduled
+  fwd+bwd WorkUnit executor) — with measured step time, the XLA-reported
+  temp bytes, and the scheduled runtime's *actual* activation-store size
+  (``plan_scheduled_runtime``: min(K, S) slots for 1f1b vs K for gpipe);
 - a calibration fit of the analytic model ``t = c / (1 - bubble)`` against
-  the measurements (the ROADMAP item: calibrate the bubble + transfer model
-  against measured ``pipeline_apply`` step times) with per-point residuals;
+  the ad-lane measurements (the ROADMAP item: calibrate the bubble +
+  transfer model against measured ``pipeline_apply`` step times) with
+  per-point residuals;
 - an **equal-memory comparison**: at the activation budget GPipe needs for
   its K (residency = K micro-batches live), 1F1B fits K' >= K (residency
   min(K', S)) and interleaved fits vK' ticks of wave — so both run a larger
   feasible micro-batch count and a smaller bubble, and their measured step
   time must come in at or under GPipe's.
 
-gpipe and 1f1b share one executable forward dataflow at equal K (AD builds
-the backward; see ``parallel/pipeline.py``), so their measured times differ
-only at the *feasible* K each schedule's memory model admits — which is
-exactly the comparison the planner makes.
+On the ad runtime gpipe and 1f1b share one executable forward dataflow at
+equal K (AD builds the backward), so their measured times differ only at
+the *feasible* K each schedule's memory model admits.  The scheduled
+runtime is where the schedules actually diverge at runtime: 1f1b's store
+holds min(K, S) stage inputs vs gpipe's K at identical tick counts.
 """
 from __future__ import annotations
 
@@ -61,6 +69,8 @@ def _measure(reps: int, warmup: int):
 
     from repro.parallel.jaxcompat import make_mesh, set_mesh
     from repro.parallel.pipeline import (make_schedule, pipeline_apply,
+                                         pipeline_value_and_grad,
+                                         plan_scheduled_runtime,
                                          stack_to_stages)
 
     mesh = make_mesh((1, STAGES), ("data", "model"))
@@ -74,30 +84,68 @@ def _measure(reps: int, warmup: int):
             lambda x, lp: (jnp.tanh(x @ lp["w"] + lp["b"]), None), x, sp)
         return y
 
+    def _time(compiled, args):
+        jax.block_until_ready(compiled(*args))
+        for _ in range(warmup):
+            jax.block_until_ready(compiled(*args))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
     points = []
     for sched_kind, k, v in _sweep_points():
         sched = make_schedule(sched_kind, STAGES, k, v)
         stacked = stack_to_stages(params, STAGES, v)
+        mb_bytes = (BATCH // k) * D_MODEL * 4          # one f32 stage input
 
-        def loss(p, x):
-            y = pipeline_apply(mesh, "model", stage_fn, p, x, n_micro=k,
-                               schedule=sched_kind, virtual_stages=v)
-            return (y ** 2).mean()
+        def ad_step(p, x):
+            def loss(p, x):
+                y = pipeline_apply(mesh, "model", stage_fn, p, x, n_micro=k,
+                                   schedule=sched_kind, virtual_stages=v)
+                return (y ** 2).mean()
 
+            return jax.value_and_grad(loss)(p, x)
+
+        inv = 1.0 / (BATCH * D_MODEL)
+
+        def sched_step(p, x):
+            def loss_fn(lp, y_m, t_m):
+                return (y_m ** 2).sum() * inv
+
+            l, (gs, _, _) = pipeline_value_and_grad(
+                mesh, "model", stage_fn, p, x, loss_fn=loss_fn,
+                loss_params={}, n_micro=k, schedule=sched_kind,
+                virtual_stages=v)
+            return l, gs
+
+        rtp = plan_scheduled_runtime(sched)
+        lanes = {}
         with set_mesh(mesh):
-            step = jax.jit(jax.value_and_grad(loss))
-            jax.block_until_ready(step(stacked, x))   # compile
-            for _ in range(warmup):
-                jax.block_until_ready(step(stacked, x))
-            best = float("inf")
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                jax.block_until_ready(step(stacked, x))
-                best = min(best, time.perf_counter() - t0)
+            for name, fn in (("ad", ad_step), ("scheduled", sched_step)):
+                compiled = jax.jit(fn).lower(stacked, x).compile()
+                ma = compiled.memory_analysis()
+                lanes[name] = {
+                    "step_time_s": _time(compiled, (stacked, x)),
+                    "xla_temp_bytes": int(ma.temp_size_in_bytes),
+                }
+            lanes["scheduled"].update({
+                "store_slots": rtp.fwd_slots,
+                "store_bytes": rtp.fwd_slots * mb_bytes,
+                "cotangent_store_bytes": rtp.bwd_slots * mb_bytes,
+            })
+            # the ad runtime stashes every micro-batch boundary across the
+            # fwd->bwd transpose regardless of schedule
+            lanes["ad"].update({"store_slots": k * max(v, 1),
+                                "store_bytes": k * max(v, 1) * mb_bytes})
+        best = lanes["ad"]["step_time_s"]
         tbl = sched.table()
         points.append({
             "schedule": sched_kind, "n_micro": k, "virtual_stages": v,
             "step_time_s": best,
+            "runtimes": lanes,
             "bubble_fraction": sched.bubble_fraction(),
             "activation_residency_microbatches":
                 sched.activation_residency(),
@@ -105,8 +153,12 @@ def _measure(reps: int, warmup: int):
             "total_ticks": tbl[-1].tick + 1,
         })
         print(f"pipeline_sweep,schedule={sched_kind},micro={k},v={v},"
-              f"step_s={best:.5f},bubble={sched.bubble_fraction():.4f},"
-              f"resid={sched.activation_residency():.1f}", flush=True)
+              f"ad_step_s={best:.5f},"
+              f"scheduled_step_s={lanes['scheduled']['step_time_s']:.5f},"
+              f"bubble={sched.bubble_fraction():.4f},"
+              f"resid={sched.activation_residency():.1f},"
+              f"store={lanes['scheduled']['store_slots']}"
+              f"/{lanes['ad']['store_slots']}", flush=True)
     return points
 
 
@@ -133,6 +185,28 @@ def _calibrate(points):
             "per_tick_overhead_s": float(o),
             "per_point_rel_err": resid,
             "max_abs_rel_err": max(abs(r) for r in resid.values())}
+
+
+def _runtime_comparison(points):
+    """Scheduled-vs-ad lane summary: per-point step-time ratio plus the
+    store realization that is the scheduled runtime's point — 1f1b's
+    activation store strictly under gpipe's at K > S (the ad lanes tie at
+    K slots for every schedule)."""
+    out = {"points": {}}
+    for p in points:
+        ad, sc = p["runtimes"]["ad"], p["runtimes"]["scheduled"]
+        out["points"][f'{p["schedule"]}@{p["n_micro"]}'] = {
+            "scheduled_over_ad_time": sc["step_time_s"] / ad["step_time_s"],
+            "store_slots_scheduled": sc["store_slots"],
+            "store_slots_ad": ad["store_slots"],
+        }
+    f = {p["n_micro"]: p for p in points if p["schedule"] == "1f1b"}
+    g = {p["n_micro"]: p for p in points if p["schedule"] == "gpipe"}
+    out["1f1b_store_lt_gpipe_at_K_gt_S"] = {
+        str(k): f[k]["runtimes"]["scheduled"]["store_slots"]
+        < g[k]["runtimes"]["scheduled"]["store_slots"]
+        for k in f if k in g and k > STAGES}
+    return out
 
 
 def _equal_memory(points):
@@ -181,6 +255,7 @@ def main(argv=None) -> int:
         "points": points,
         "calibration": _calibrate(points),
         "equal_memory": _equal_memory(points),
+        "runtime_comparison": _runtime_comparison(points),
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)

@@ -25,9 +25,12 @@ paper's §4.4 implementation for GNMT and BigLSTM).  For each point it
     optimizer state + gradients + remat boundary activations, ZeRO/fsdp-aware
     and **schedule-aware** (gpipe holds all K micro-batch activations, 1f1b
     at most min(K, S) — so 1f1b keeps micro-batch counts feasible that gpipe
-    cannot fit): a point that only fits with params/opt sharded over DP is
-    emitted with ``fsdp_axes`` set, and a point that does not fit even then
-    is pruned rather than ranked;
+    cannot fit), keyed off the **pipeline runtime** that will execute the
+    plan (``pipe_runtime="scheduled"`` realizes the schedule's residency
+    bound via ``pipeline_value_and_grad``; ``"ad"`` holds all K for every
+    schedule, so 1f1b's memory edge vanishes there): a point that only fits
+    with params/opt sharded over DP is emitted with ``fsdp_axes`` set, and a
+    point that does not fit even then is pruned rather than ranked;
 (e) evaluates Eq. 4 vs Eq. 5 over the surviving points and returns them
     best-first, each as an executable ``ParallelPlan`` (tensor plans with
     ``model_axis``, pipeline plans additionally with ``mp_kind="pipeline"``,
@@ -170,7 +173,8 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
                          opt_bytes_per_param: float = 8.0,
                          remat: bool = True, microbatches: int = 1,
                          schedule: str = "gpipe",
-                         virtual_stages: int = 1) -> float:
+                         virtual_stages: int = 1,
+                         pipe_runtime: str = "scheduled") -> float:
     """Projected per-device working set of one training step.
 
     f32 master params + optimizer state shard over (mp x fsdp); gradients
@@ -178,12 +182,16 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
     reduce-scattered, never fully materialized per rank); boundary
     activations kept by remat shard over the model axis for tensor-MP.
 
-    Pipeline-MP activations are **schedule-aware**: each in-flight
-    micro-batch holds keep_per_layer boundaries for this stage's L/mp
-    layers, and the schedule bounds how many micro-batches are in flight
+    Pipeline-MP activations are **schedule-aware** and keyed off the
+    runtime that will execute the plan: each in-flight micro-batch holds
+    keep_per_layer boundaries for this stage's L/mp layers, and the
+    schedule bounds how many micro-batches are in flight
     (``pipeline_activation_residency``: K for gpipe — the full mini-batch,
     the seed's flat model — but only min(K, S) for 1f1b, which is what lets
-    1f1b run micro-batch counts gpipe cannot fit).
+    1f1b run micro-batch counts gpipe cannot fit).  That bound is only real
+    on the hand-scheduled runtime (``pipe_runtime="scheduled"``); the
+    AD-through-scan runtime holds all K boundaries for every schedule, so
+    planning for it must cost K.
     """
     p = float(cfg.n_params())
     shard = float(max(mp, 1) * max(fsdp, 1))
@@ -196,9 +204,13 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
         k = max(microbatches, 1)
         per_micro = boundary / k                     # one micro-batch (b/K,s,d)
         resid = pipeline_activation_residency(k, max(mp, 1), schedule,
-                                              virtual_stages)
+                                              virtual_stages,
+                                              runtime=pipe_runtime)
         act = keep_per_layer * (cfg.n_layers / max(mp, 1)) * per_micro * resid
-        act += 2.0 * per_micro                       # ring in/out buffers
+        # ring in/out buffers, plus the scheduled runtime's up-to-(v-1)
+        # in-transit wrap chunks (plan_scheduled_runtime measures them);
+        # v = 1 keeps the historical 2-buffer term
+        act += (1.0 + max(virtual_stages, 1)) * per_micro
     else:
         act = keep_per_layer * cfg.n_layers * boundary / max(mp, 1)
     return state + grads + act
@@ -224,9 +236,17 @@ class HybridPlanner:
                  mp_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
                  micro_candidates: Tuple[int, ...] = (2, 4, 8, 16),
                  remat: bool = True,
-                 opt_bytes_per_param: Optional[float] = None):
+                 opt_bytes_per_param: Optional[float] = None,
+                 pipe_runtime: str = "scheduled"):
         self.cfg = cfg
         self.hw = hw
+        if pipe_runtime not in ("scheduled", "ad"):
+            raise ValueError(f"unknown pipe_runtime {pipe_runtime!r}")
+        # the runtime that will execute pipeline plans: the memory filter
+        # must model what the executor actually holds live (the scheduled
+        # runtime realizes each schedule's residency bound; AD-through-scan
+        # holds all K micro-batches for every schedule)
+        self.pipe_runtime = pipe_runtime
         self.epoch_model = epoch_model
         self.mini_batch = mini_batch
         self.seq_len = seq_len
@@ -301,7 +321,8 @@ class HybridPlanner:
             opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat,
             microbatches=n_micro if pipe else 1,
             schedule=sched if pipe else "gpipe",
-            virtual_stages=v if pipe else 1)
+            virtual_stages=v if pipe else 1,
+            pipe_runtime=self.pipe_runtime)
         mem = per_device_mem_bytes(self.cfg, fsdp=1, **mem_kw)
         fsdp = False
         if mem > self.hw.hbm_bytes and n > 1:
@@ -328,6 +349,7 @@ class HybridPlanner:
             microbatches=n_micro if pipe else 1,
             schedule=sched if pipe else "gpipe",
             virtual_stages=v if pipe else 1,
+            runtime=self.pipe_runtime,
             remat=self.remat)
         mesh_shape = (pods, n // pods, m) if pods > 1 else (n, m)
         return PlannerChoice(

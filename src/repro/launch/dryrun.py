@@ -44,8 +44,8 @@ from repro.train.steps import (TrainState, _make_pctx, make_train_step,
 ADAFACTOR_ARCHS = {"kimi_k2_1t_a32b", "nemotron_4_340b"}
 
 
-def make_plan(arch: str, mesh, plan_name: str,
-              schedule: str = "gpipe") -> ParallelPlan:
+def make_plan(arch: str, mesh, plan_name: str, schedule: str = "gpipe",
+              pipe_runtime: str = "scheduled") -> ParallelPlan:
     multi = "pod" in mesh.axis_names
     dp_axes = ("pod", "data") if multi else ("data",)
     fsdp = dp_axes if (plan_name == "optimized" or arch in ADAFACTOR_ARCHS) else ()
@@ -60,6 +60,7 @@ def make_plan(arch: str, mesh, plan_name: str,
                             mp_kind="pipeline", microbatches=4,
                             schedule=schedule,
                             virtual_stages=2 if schedule == "interleaved" else 1,
+                            runtime=pipe_runtime,
                             fsdp_axes=tuple(fsdp))
     return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp))
 
@@ -160,13 +161,15 @@ def _unrolled_variant(cfg, n_layers: int):
 
 def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
                   plan_name: str = "baseline", skip_analysis: bool = False,
-                  unroll_analysis: bool = True, schedule: str = "gpipe"):
+                  unroll_analysis: bool = True, schedule: str = "gpipe",
+                  pipe_runtime: str = "scheduled"):
     """Run the dry-run for one (arch, shape, mesh) and return the record."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    plan = make_plan(arch, mesh, plan_name, schedule=schedule)
+    plan = make_plan(arch, mesh, plan_name, schedule=schedule,
+                     pipe_runtime=pipe_runtime)
     if plan.is_pipeline:
         # the 1-/2-layer unroll artifacts cannot be partitioned into the
         # 16-stage pipeline; per-layer cost deltas are tensor-plan-only
@@ -175,6 +178,27 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
            "plan": plan_name,
            "plan_detail": plan.describe(mesh)}
+    if plan.is_pipeline:
+        # the schedule's predicted idle fraction and activation residency
+        # (keyed off the runtime that will execute it), printed next to the
+        # lane banner and persisted with the record
+        from repro.parallel.pipeline import (make_schedule,
+                                             pipeline_activation_residency)
+        stages = mesh.shape["model"]
+        sched_obj = make_schedule(plan.schedule, stages, plan.microbatches,
+                                  plan.virtual_stages)
+        resid = pipeline_activation_residency(
+            plan.microbatches, stages, plan.schedule, plan.virtual_stages,
+            runtime=plan.runtime)
+        rec["pipeline"] = {
+            "schedule": plan.schedule, "runtime": plan.runtime,
+            "n_stages": stages, "n_micro": plan.microbatches,
+            "virtual_stages": sched_obj.v,
+            "bubble_fraction": sched_obj.bubble_fraction(),
+            "activation_residency_microbatches": resid,
+        }
+        print(f"  [pipe] {sched_obj.describe()} runtime={plan.runtime} "
+              f"resid@runtime={resid:.1f}", flush=True)
 
     t0 = time.time()
     with set_mesh(mesh):
@@ -249,12 +273,31 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--plan", default="baseline",
                     choices=["baseline", "optimized", "pipeline"])
-    ap.add_argument("--sched", default="gpipe",
+    ap.add_argument("--sched", default=None,
                     choices=["gpipe", "1f1b", "interleaved"],
-                    help="pipeline schedule for --plan pipeline")
+                    help="pipeline schedule for --plan pipeline "
+                         "(default gpipe; interleaved implies v=2)")
+    ap.add_argument("--pipe-runtime", default=None,
+                    choices=["scheduled", "ad"],
+                    help="pipeline runtime for --plan pipeline (default "
+                         "scheduled: the hand-scheduled fwd+bwd executor)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-analysis", action="store_true")
     args = ap.parse_args()
+
+    # validate the pipeline-only knobs early: silently ignoring --sched or
+    # --pipe-runtime on a non-pipeline plan would dry-run a different
+    # strategy than the operator asked for
+    if args.plan != "pipeline":
+        for flag, val in (("--sched", args.sched),
+                          ("--pipe-runtime", args.pipe_runtime)):
+            if val is not None:
+                raise SystemExit(
+                    f"[plan] {flag} {val} only applies to --plan pipeline "
+                    f"(got --plan {args.plan}); drop the flag or select the "
+                    f"pipeline plan")
+    sched = args.sched or "gpipe"
+    pipe_runtime = args.pipe_runtime or "scheduled"
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
@@ -270,7 +313,7 @@ def main():
                     # axis (x v chunks for interleaved) must evenly
                     # partition the arch's layer stack
                     from repro.models.api import pipeline_applicable
-                    v = 2 if args.sched == "interleaved" else 1
+                    v = 2 if sched == "interleaved" else 1
                     if (INPUT_SHAPES[shape].kind != "train"
                             or not pipeline_applicable(get_config(arch), 16, v)):
                         print(f"[skip] {arch}__{shape} (pipeline n/a)")
@@ -287,7 +330,8 @@ def main():
                     rec = analyze_combo(arch, shape, multi_pod=multi,
                                         plan_name=args.plan,
                                         skip_analysis=args.skip_analysis or multi,
-                                        schedule=args.sched)
+                                        schedule=sched,
+                                        pipe_runtime=pipe_runtime)
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)
                     r = rec["roofline"]

@@ -111,6 +111,14 @@ def main():
     ap.add_argument("--max-local-devices", type=int, default=8,
                     help="cap on forced host devices for dp x stages "
                          "pipeline execution on CPU")
+    ap.add_argument("--pipe-runtime", choices=["scheduled", "ad"],
+                    default=None,
+                    help="pipeline runtime escape hatch: 'scheduled' "
+                         "(default) hand-executes the full fwd+bwd WorkUnit "
+                         "table and realizes the schedule's activation "
+                         "residency; 'ad' keeps jax.grad through the "
+                         "forward scan (GPipe-like memory) for bit-for-bit "
+                         "differential testing")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -118,6 +126,12 @@ def main():
         cfg = cfg.reduced()
     budget = args.devices or 256
     plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg)
+    if args.pipe_runtime:
+        if not plan.is_pipeline:
+            raise SystemExit("[plan] --pipe-runtime only applies to pipeline "
+                             "plans (--parallel pipe=... or a planner choice "
+                             "with kind=pipeline)")
+        plan = dataclasses.replace(plan, runtime=args.pipe_runtime)
 
     # Pipeline plans need a real mesh axis with one device per stage plus as
     # much of the projected DP degree as fits locally; size the executable

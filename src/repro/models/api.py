@@ -23,15 +23,23 @@ from repro.models import transformer as tf_mod
 from repro.models.transformer import ParallelCtx
 
 
-def cross_entropy(logits, labels, n_valid_vocab: int):
-    """Mean token NLL in f32; labels < 0 are masked out."""
+def masked_nll_sum(logits, labels):
+    """Summed token NLL in f32 (labels < 0 masked) — the additive per-micro
+    numerator of ``cross_entropy``.  The scheduled pipeline runtime sums one
+    of these per finished micro-batch and scales by the global valid-token
+    count, recovering the mean the AD path computes over the whole batch."""
     logits = logits.astype(jnp.float32)
     mask = labels >= 0
     labels = jnp.maximum(labels, 0)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    nll = (logz - gold) * mask
-    return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return ((logz - gold) * mask).sum()
+
+
+def cross_entropy(logits, labels, n_valid_vocab: int):
+    """Mean token NLL in f32; labels < 0 are masked out."""
+    mask = labels >= 0
+    return masked_nll_sum(logits, labels) / jnp.maximum(mask.sum(), 1)
 
 
 def vocab_parallel_cross_entropy(logits, labels, n_valid_vocab: int, *,
@@ -85,8 +93,15 @@ class ModelApi:
     decode_fn: Optional[Callable]     # (params, cache, batch, pctx, window) -> (logits, cache)
     # (params, batch, mesh=, axis=, n_micro=, schedule=, virtual_stages=,
     # batch_axes=) -> (loss, metrics); set for the archs whose layer stack
-    # the pipeline runtime can partition into stages
+    # the pipeline runtime can partition into stages.  This is the **ad**
+    # runtime: jax.grad through pipeline_apply's forward scan.
     pipeline_loss_fn: Optional[Callable] = None
+    # Same signature -> ((loss, metrics), grads); the **scheduled** runtime:
+    # executes the full fwd+bwd WorkUnit table by hand
+    # (parallel.pipeline.pipeline_value_and_grad), with the arch decomposed
+    # into pure (params, x) -> y stage callables plus an embedding vjp'd
+    # outside and a per-micro loss seeded at the emit tick.
+    pipeline_value_and_grad_fn: Optional[Callable] = None
 
     def input_specs(self, shape: InputShape, *, reduced: bool = False) -> Dict[str, Any]:
         return make_input_specs(self.cfg, shape, reduced=reduced)
@@ -196,6 +211,59 @@ def pipeline_applicable(cfg: ModelConfig, n_stages: int,
             and cfg.n_layers % (n_stages * max(virtual_stages, 1)) == 0)
 
 
+def _pipeline_vag_builder(cfg, stage_key: str, make_stage_fn: Callable,
+                          pre_fn: Callable, head_fn: Callable,
+                          to_stacked: Callable, from_stacked: Callable):
+    """Compose an arch into the scheduled pipeline runtime's three pure
+    parts — ``pre_fn(outer_params, batch) -> x`` (embedding, vjp'd outside
+    the pipeline), ``stage_fn(chunk_params, x) -> y`` per WorkUnit, and
+    ``head_fn(outer_params, y_micro) -> logits`` feeding the per-micro NLL
+    seeded at each emit tick — returning a
+    ``(params, batch, ...) -> ((loss, metrics), grads)`` train-step body.
+
+    The per-micro loss is the summed NLL scaled by the *global* inverse
+    valid-token count (data-dependent but parameter-independent, so it is
+    computable before the pipeline runs); summed over micro-batches it
+    recovers exactly the batch-mean cross entropy the ad path computes.
+    Tied embeddings fall out naturally: the embed table's head-side
+    cotangent (from ``head_fn``) and embedding-side cotangent (from
+    ``pre_fn``'s vjp) are summed leaf-wise.
+    """
+    def pipe_vag_fn(params, batch, *, mesh, axis, n_micro, schedule="gpipe",
+                    virtual_stages=1, batch_axes=()):
+        from repro.parallel.pipeline import (make_schedule,
+                                             pipeline_value_and_grad,
+                                             stack_to_stages,
+                                             stages_to_stack)
+        n_stages = mesh.shape[axis]
+        sched = (make_schedule(schedule, n_stages, n_micro, virtual_stages)
+                 if isinstance(schedule, str) else schedule)
+        outer = {k: p for k, p in params.items() if k != stage_key}
+        labels = batch["labels"]
+        inv_count = 1.0 / jnp.maximum((labels >= 0).sum(), 1).astype(
+            jnp.float32)
+
+        x, pre_vjp = jax.vjp(lambda op: pre_fn(op, batch), outer)
+
+        def loss_fn(lpp, y_m, lbl_m):
+            return masked_nll_sum(head_fn(lpp["outer"], y_m),
+                                  lbl_m) * lpp["inv_count"]
+
+        stages = stack_to_stages(to_stacked(params[stage_key]), n_stages,
+                                 sched.v)
+        loss, (stage_g, lp_g, dx) = pipeline_value_and_grad(
+            mesh, axis, make_stage_fn(), stages, x, loss_fn=loss_fn,
+            loss_params={"outer": outer, "inv_count": inv_count},
+            targets=labels, n_micro=n_micro, batch_axes=batch_axes,
+            schedule=sched)
+        grads = jax.tree.map(jnp.add, lp_g["outer"], pre_vjp(dx)[0])
+        grads[stage_key] = from_stacked(
+            stages_to_stack(stage_g, n_stages, sched.v))
+        return (loss, {"loss": loss}), grads
+
+    return pipe_vag_fn
+
+
 def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
                 remat: bool = True, capacity_factor=1.25) -> ModelApi:
     if cfg.family == "cnn":
@@ -241,8 +309,21 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 
+        dt = jnp.dtype(cfg.dtype)
+        pipe_vag_fn = _pipeline_vag_builder(
+            cfg, "lstm",
+            make_stage_fn=lambda: lstm_mod.biglstm_stage_fn(cfg),
+            pre_fn=lambda op, b: jnp.take(op["embed"], b["tokens"],
+                                          axis=0).astype(dt),
+            head_fn=lambda op, y: y @ op["head"].astype(y.dtype),
+            to_stacked=lstm_mod.stack_layer_params,
+            from_stacked=lambda st: [
+                jax.tree.map(lambda a, i=i: a[i], st)
+                for i in range(cfg.n_layers)])
+
         return ModelApi(cfg, init, loss_fn, None, None,
-                        pipeline_loss_fn=pipe_loss_fn)
+                        pipeline_loss_fn=pipe_loss_fn,
+                        pipeline_value_and_grad_fn=pipe_vag_fn)
 
     # --- transformer families ---
     def init(key):
@@ -277,7 +358,7 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
         return tf_mod.decode_step(cfg, params, cache, batch,
                                   window_override=window, pctx=pctx)
 
-    pipe_loss_fn = None
+    pipe_loss_fn = pipe_vag_fn = None
     if supports_pipeline(cfg):
         def pipe_loss_fn(params, batch, *, mesh, axis, n_micro,
                          schedule="gpipe", virtual_stages=1, batch_axes=()):
@@ -289,5 +370,14 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 
+        pipe_vag_fn = _pipeline_vag_builder(
+            cfg, "layers",
+            make_stage_fn=lambda: tf_mod.pipeline_stage_fn(
+                cfg, remat=remat, rwkv_chunked=rwkv_chunked),
+            pre_fn=lambda op, b: tf_mod._embed(cfg, op, b["tokens"]),
+            head_fn=lambda op, y: tf_mod._head(cfg, op, y),
+            to_stacked=lambda t: t, from_stacked=lambda t: t)
+
     return ModelApi(cfg, init, loss_fn, prefill, decode_fn,
-                    pipeline_loss_fn=pipe_loss_fn)
+                    pipeline_loss_fn=pipe_loss_fn,
+                    pipeline_value_and_grad_fn=pipe_vag_fn)

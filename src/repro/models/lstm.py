@@ -148,6 +148,22 @@ def biglstm_forward(cfg, params, batch):
     return x @ params["head"].astype(dt)
 
 
+def biglstm_stage_fn(cfg):
+    """One pipeline chunk of BigLSTM's residual LSTM stack as a pure
+    shape-preserving ``(chunk_params, x) -> y`` callable — the unit the
+    hand-scheduled runtime ``jax.vjp``'s per WorkUnit."""
+
+    def stage_fn(sp, x):
+        def body(x, lp):
+            y, _ = lstm_layer(lp, x)
+            return x + y, None
+
+        x, _ = jax.lax.scan(body, x, sp)
+        return x
+
+    return stage_fn
+
+
 def biglstm_forward_pipeline(cfg, params, batch, *, mesh, axis: str,
                              n_micro: int, schedule: str = "gpipe",
                              virtual_stages: int = 1, batch_axes=()):
@@ -162,16 +178,7 @@ def biglstm_forward_pipeline(cfg, params, batch, *, mesh, axis: str,
     n_stages = mesh.shape[axis]
     stages = stack_to_stages(stack_layer_params(params["lstm"]), n_stages,
                              virtual_stages)
-
-    def stage_fn(sp, x):
-        def body(x, lp):
-            y, _ = lstm_layer(lp, x)
-            return x + y, None
-
-        x, _ = jax.lax.scan(body, x, sp)
-        return x
-
-    x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro,
-                       schedule=schedule, virtual_stages=virtual_stages,
-                       batch_axes=batch_axes)
+    x = pipeline_apply(mesh, axis, biglstm_stage_fn(cfg), stages, x,
+                       n_micro=n_micro, schedule=schedule,
+                       virtual_stages=virtual_stages, batch_axes=batch_axes)
     return x @ params["head"].astype(dt)

@@ -549,6 +549,27 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
     return logits, aux
 
 
+def pipeline_stage_fn(cfg, *, remat: bool = True, rwkv_chunked: bool = False,
+                      window_override=None):
+    """One pipeline chunk of the decoder stack as a pure shape-preserving
+    ``(chunk_params, x) -> y`` callable — the unit both pipeline runtimes
+    place per ``WorkUnit`` and the hand-scheduled runtime ``jax.vjp``'s."""
+    window = cfg.sliding_window if window_override is None else window_override
+
+    def stage_fn(sp, x):
+        def body(x, lp):
+            y, _, _ = block_apply(cfg, lp, x, mode="train", window=window,
+                                  pos0=0, rwkv_chunked=rwkv_chunked)
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, sp)
+        return x
+
+    return stage_fn
+
+
 def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
                      remat: bool = True, rwkv_chunked: bool = False,
                      window_override=None, schedule: str = "gpipe",
@@ -562,22 +583,11 @@ def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
     logits only."""
     from repro.parallel.pipeline import pipeline_apply, stack_to_stages
 
-    window = cfg.sliding_window if window_override is None else window_override
     x = _embed(cfg, params, batch["tokens"])
     n_stages = mesh.shape[axis]
     stages = stack_to_stages(params["layers"], n_stages, virtual_stages)
-
-    def stage_fn(sp, x):
-        def body(x, lp):
-            y, _, _ = block_apply(cfg, lp, x, mode="train", window=window,
-                                  pos0=0, rwkv_chunked=rwkv_chunked)
-            return y, None
-
-        if remat:
-            body = jax.checkpoint(body, prevent_cse=False)
-        x, _ = jax.lax.scan(body, x, sp)
-        return x
-
+    stage_fn = pipeline_stage_fn(cfg, remat=remat, rwkv_chunked=rwkv_chunked,
+                                 window_override=window_override)
     x = pipeline_apply(mesh, axis, stage_fn, stages, x, n_micro=n_micro,
                        schedule=schedule, virtual_stages=virtual_stages,
                        batch_axes=batch_axes)

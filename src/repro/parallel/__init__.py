@@ -1,12 +1,17 @@
 from repro.parallel.plan import ParallelPlan, plan_degrees
 from repro.parallel.pipeline import (PipelineSchedule, SCHEDULE_KINDS,
-                                     make_schedule,
+                                     ScheduledRuntimePlan, make_schedule,
                                      pipeline_activation_residency,
                                      pipeline_apply, pipeline_bubble_fraction,
-                                     pipeline_step_speedup, stack_to_stages)
+                                     pipeline_step_speedup,
+                                     pipeline_value_and_grad,
+                                     plan_scheduled_runtime, stack_to_stages,
+                                     stages_to_stack)
 from repro.parallel.sharding import ShardingRules
 
 __all__ = ["ParallelPlan", "plan_degrees", "PipelineSchedule",
-           "SCHEDULE_KINDS", "make_schedule", "pipeline_apply",
-           "pipeline_bubble_fraction", "pipeline_activation_residency",
-           "pipeline_step_speedup", "stack_to_stages", "ShardingRules"]
+           "SCHEDULE_KINDS", "ScheduledRuntimePlan", "make_schedule",
+           "pipeline_apply", "pipeline_bubble_fraction",
+           "pipeline_activation_residency", "pipeline_step_speedup",
+           "pipeline_value_and_grad", "plan_scheduled_runtime",
+           "stack_to_stages", "stages_to_stack", "ShardingRules"]

@@ -28,7 +28,21 @@ class ParallelPlan:
     # interleaved, the virtual layer chunks per device (v).
     schedule: str = "gpipe"
     virtual_stages: int = 1
+    # Which pipeline runtime executes the schedule: "scheduled" runs the
+    # complete fwd+bwd WorkUnit table by hand (pipeline_value_and_grad —
+    # realizes the schedule's activation residency, e.g. 1f1b's min(K, S));
+    # "ad" runs the forward placement through lax.scan and lets jax AD
+    # synthesize the backward (GPipe-like K-micro residency regardless of
+    # schedule; kept for bit-for-bit differential testing).
+    runtime: str = "scheduled"
     remat: bool = True
+
+    PIPE_RUNTIMES = ("scheduled", "ad")
+
+    def __post_init__(self):
+        if self.runtime not in self.PIPE_RUNTIMES:
+            raise ValueError(f"unknown pipeline runtime {self.runtime!r}; "
+                             f"expected one of {self.PIPE_RUNTIMES}")
 
     @property
     def is_pipeline(self) -> bool:
@@ -43,7 +57,7 @@ class ParallelPlan:
         sched = ""
         if self.is_pipeline:
             v = f" v={self.virtual_stages}" if self.virtual_stages > 1 else ""
-            sched = f" [{self.schedule}{v}]"
+            sched = f" [{self.schedule}{v}, {self.runtime} runtime]"
         return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP{sched}"
                 f"{' +fsdp' if self.fsdp_axes else ''}"
                 f"{f' x{self.microbatches} {unit}' if self.microbatches > 1 else ''}")

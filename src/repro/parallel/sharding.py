@@ -9,7 +9,10 @@ ZeRO-style sharding of the remaining large dim over the DP axes.
 Pipeline plans (``plan.is_pipeline``) switch to **stage-dim** rules instead:
 the stacked layer dim is sharded over the model axis (per-stage parameter
 residency, matching ``parallel.pipeline.stack_to_stages``), embed/head stay
-replicated across stages.
+replicated across stages.  ``residual_store_spec`` gives the matching
+stage-dim layout of the scheduled runtime's activation store (the
+``pipeline_value_and_grad`` residual stash): slots are stage-local, the
+micro-batch dim shards over the DP axes.
 """
 from __future__ import annotations
 
@@ -193,6 +196,19 @@ class ShardingRules:
         if name == "attn_q":
             return P(self._f(shape[0]), None)
         return P(*([None] * nd))
+
+    def residual_store_spec(self, ndim: int):
+        """Stage-dim spec of the scheduled pipeline runtime's activation
+        store viewed as a logical (n_stages, n_slots, mb, ...) array with
+        ``ndim`` dims: per-stage slots on the model axis (each device owns
+        exactly its ``plan_scheduled_runtime`` slot file), the micro-batch
+        dim sharded over the DP axes — the layout
+        ``pipeline_value_and_grad`` carries inside its shard_map scan."""
+        if ndim < 3:
+            raise ValueError(f"store is (stages, slots, mb, ...); ndim={ndim}")
+        b = self.batch_axes if _axis_size(self.mesh, self.batch_axes) > 1 \
+            else None
+        return P(self.ms, None, b, *([None] * (ndim - 3)))
 
     # -- public API --------------------------------------------------------
     def params_specs(self, params_shape):

@@ -59,16 +59,19 @@ def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
     """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn).
 
     ``mp_kind="pipeline"`` plans route the forward/backward through the
-    arch's GPipe runtime (``api.pipeline_loss_fn`` -> ``pipeline_apply``):
-    ``plan.microbatches`` then counts in-flight pipeline micro-batches, not
-    delayed-gradient accumulation steps, so the accumulation loop is off.
+    arch's pipeline runtime selected by ``plan.runtime``: **"scheduled"**
+    (default) calls ``api.pipeline_value_and_grad_fn`` — the hand-scheduled
+    executor of the full fwd+bwd WorkUnit table
+    (``parallel.pipeline.pipeline_value_and_grad``), which realizes the
+    schedule's activation residency (1f1b holds min(K, S) micro-batches);
+    **"ad"** keeps ``jax.value_and_grad`` of ``api.pipeline_loss_fn`` ->
+    ``pipeline_apply`` (GPipe-like memory, the differential-testing
+    baseline).  ``plan.microbatches`` then counts in-flight pipeline
+    micro-batches, not delayed-gradient accumulation steps, so the
+    accumulation loop is off.
     """
     pipelined = (plan.is_pipeline and mesh is not None
                  and mesh.shape[plan.model_axis] > 1)
-    if pipelined and api.pipeline_loss_fn is None:
-        raise ValueError(
-            f"{api.cfg.name}: plan requests pipeline-MP but the arch has no "
-            f"pipeline runtime (models.api.supports_pipeline)")
     micro = 1 if pipelined else plan.microbatches
 
     if pipelined:
@@ -76,22 +79,38 @@ def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
         # pipeline shard_map; the gradient psum over them is GSPMD's
         batch_axes = tuple(a for a in plan.dp_axes
                            if mesh.shape.get(a, 1) > 1)
+        pipe_kw = dict(mesh=mesh, axis=plan.model_axis,
+                       n_micro=max(plan.microbatches, 1),
+                       schedule=plan.schedule,
+                       virtual_stages=plan.virtual_stages,
+                       batch_axes=batch_axes)
+        runtime_fn = (api.pipeline_value_and_grad_fn
+                      if plan.runtime == "scheduled"
+                      else api.pipeline_loss_fn)
+        if runtime_fn is None:
+            raise ValueError(
+                f"{api.cfg.name}: plan requests pipeline-MP "
+                f"({plan.runtime} runtime) but the arch has no pipeline "
+                f"runtime (models.api.supports_pipeline)")
 
-        def loss_fn(params, batch):
-            return api.pipeline_loss_fn(params, batch, mesh=mesh,
-                                        axis=plan.model_axis,
-                                        n_micro=max(plan.microbatches, 1),
-                                        schedule=plan.schedule,
-                                        virtual_stages=plan.virtual_stages,
-                                        batch_axes=batch_axes)
+        if plan.runtime == "scheduled":
+            def grads_of(params, batch):
+                (loss, metrics), grads = runtime_fn(params, batch, **pipe_kw)
+                return loss, metrics, grads
+        else:
+            def grads_of(params, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p, b: runtime_fn(p, b, **pipe_kw),
+                    has_aux=True)(params, batch)
+                return loss, metrics, grads
     else:
         def loss_fn(params, batch):
             return api.loss_fn(params, batch, pctx)
 
-    def grads_of(params, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        return loss, metrics, grads
+        def grads_of(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
 
     def train_step(state: TrainState, batch):
         params = state.params
