@@ -49,15 +49,29 @@ class TrainingRun:
     # bubble model); plain (M, K) keys are accepted as gpipe for back-compat
     pipe_speedup: Dict[Tuple, float] = \
         dataclasses.field(default_factory=dict)
+    # Measured fraction of the DP gradient exchange hidden under backward
+    # compute (comm.MEASURED_OVERLAP keyed by the selected comm runtime: 0
+    # for GSPMD's monolithic all-reduce) and the runtime's bucket size (> 0
+    # charges the bucketed sync's per-bucket alpha cost).
+    comm_overlap: float = 0.0
+    bucket_bytes: float = 0.0
 
 
-def se(run: TrainingRun, n: int, *, overlap: float = 0.0,
-       grad_scale: float = 1.0) -> float:
+def se(run: TrainingRun, n: int, *, overlap: Optional[float] = None,
+       grad_scale: float = 1.0, hybrid: bool = False) -> float:
     """Scaling efficiency SE_N of N-way DP.  ``grad_scale`` shrinks the
     gradient exchange for hybrid points (each M-way-MP worker owns — and
-    all-reduces — only 1/M of the parameters)."""
+    all-reduces — only 1/M of the parameters).  ``overlap`` defaults to the
+    run's measured comm overlap (keyed off the selected comm runtime) —
+    EXCEPT for ``hybrid`` points: the bucketed/overlapped DP grad sync only
+    executes for pure-DP plans (train.steps gates it on model-axis size 1),
+    so MP workers' exchanges are costed as the fused exposed all-reduce.
+    The planner must never credit a speedup the runtime cannot deliver."""
+    if overlap is None:
+        overlap = 0.0 if hybrid else run.comm_overlap
+    bucket = 0.0 if hybrid else run.bucket_bytes
     return scaling_efficiency(run.grad_bytes * grad_scale, run.t1, n, run.hw,
-                              overlap=overlap,
+                              overlap=overlap, bucket_bytes=bucket,
                               assume_perfect=run.se_perfect)
 
 
@@ -78,7 +92,8 @@ def speedup_dp(run: TrainingRun, n: int) -> float:
 def speedup_hybrid(run: TrainingRun, n_workers: int, m: int) -> float:
     """Eq. 5: N-way DP of M-way-MP workers, M*N devices total."""
     su_m = run.mp_speedup.get(m, 0.0) if m > 1 else 1.0
-    return (su_m * se(run, n_workers, grad_scale=1.0 / max(m, 1))
+    return (su_m * se(run, n_workers, grad_scale=1.0 / max(m, 1),
+                      hybrid=m > 1)
             * n_workers * epochs_ratio(run, n_workers))
 
 
@@ -91,7 +106,7 @@ def speedup_pipeline(run: TrainingRun, n_workers: int, m: int,
     su_m = run.pipe_speedup.get((m, n_micro, schedule),
                                 run.pipe_speedup.get((m, n_micro), 0.0)
                                 if schedule == "gpipe" else 0.0)
-    return (su_m * se(run, n_workers, grad_scale=1.0 / m)
+    return (su_m * se(run, n_workers, grad_scale=1.0 / m, hybrid=True)
             * n_workers * epochs_ratio(run, n_workers))
 
 
@@ -133,7 +148,8 @@ def best_strategy(run: TrainingRun, total_devices: int) -> Dict:
 def convergence_time(run: TrainingRun, n_workers: int, m: int = 1) -> float:
     """Eq. 1 evaluated for a hybrid configuration, in seconds."""
     su_m = run.mp_speedup.get(m, 1.0) if m > 1 else 1.0
-    t = run.t1 / (se(run, n_workers, grad_scale=1.0 / max(m, 1)) * su_m)
+    t = run.t1 / (se(run, n_workers, grad_scale=1.0 / max(m, 1),
+                     hybrid=m > 1) * su_m)
     global_batch = n_workers * run.mini_batch
     s = run.dataset_size / global_batch
     e = run.epoch_model.epochs(global_batch)

@@ -13,6 +13,7 @@ exactly the regime where the paper's hybrid strategy wins (Eq. 6).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.roofline import (DCI_BW, HBM_PER_CHIP, ICI_LINKS, LINK_BW,
                                  PEAK_FLOPS)
@@ -33,11 +34,38 @@ class HardwareModel:
     hbm_bytes: float = HBM_PER_CHIP      # per-device memory budget
 
 
+# Fraction of collective time hidden under partial-matmul compute / backward
+# compute for each collective runtime (parallel.collectives): the GSPMD
+# monolithic all-reduce is fully exposed; the chunked ppermute rings and the
+# bucketed DP sync overlap most of theirs.  Calibrated against the host-mesh
+# measurements in BENCH_collectives.json (benchmarks/collective_overlap_sweep
+# --smoke emits "overlap_constant"); re-measure on real ICI hardware.
+MEASURED_OVERLAP = {"gspmd": 0.0, "overlapped": 0.6}
+
+
 def ring_all_reduce_time(bytes_: float, n: int, bw: float,
                          latency: float) -> float:
+    """Bandwidth term + the latency (alpha) term: (n-1) hops of the ring,
+    each paying one launch/rendezvous latency — without it the model is a
+    pure bandwidth term that understates small transfers (and lets the
+    planner pick arbitrarily small buckets / micro-batches for free)."""
     if n <= 1:
         return 0.0
     return 2.0 * (n - 1) / n * bytes_ / bw + (n - 1) * latency
+
+
+def bucketed_all_reduce_time(bytes_: float, n: int, bw: float, latency: float,
+                             bucket_bytes: float) -> float:
+    """Ring all-reduce split into ceil(bytes/bucket) reduce-scatter +
+    all-gather bucket pairs (``parallel.collectives.bucketed_grad_sync``):
+    the wire bytes are unchanged but every bucket pays its own 2*(n-1) hop
+    latencies — the alpha cost of bucketing that the overlap win must beat
+    (this is what penalizes tiny buckets in the planner)."""
+    if n <= 1:
+        return 0.0
+    n_buckets = max(1, math.ceil(bytes_ / max(bucket_bytes, 1.0)))
+    return (2.0 * (n - 1) / n * bytes_ / bw
+            + n_buckets * 2.0 * (n - 1) * latency)
 
 
 def p2p_transfer_time(bytes_: float, hw: HardwareModel, *,
@@ -52,13 +80,23 @@ def p2p_transfer_time(bytes_: float, hw: HardwareModel, *,
 
 
 def hierarchical_all_reduce_time(bytes_: float, n: int, hw: HardwareModel,
-                                 intra_pod_degree: int) -> float:
-    """reduce-scatter intra-pod, all-reduce across pods, all-gather intra-pod."""
+                                 intra_pod_degree: int,
+                                 bucket_bytes: float = 0.0) -> float:
+    """reduce-scatter intra-pod, all-reduce across pods, all-gather intra-pod.
+
+    ``bucket_bytes`` > 0 models the bucketed runtime
+    (``parallel.collectives.bucketed_grad_sync``): the intra-pod phases pay
+    per-bucket hop latencies instead of one fused ring's."""
+    def intra(b: float, k: int) -> float:
+        if bucket_bytes > 0:
+            return bucketed_all_reduce_time(b, k, hw.ici_bw, hw.ici_latency,
+                                            bucket_bytes)
+        return ring_all_reduce_time(b, k, hw.ici_bw, hw.ici_latency)
+
     if n <= intra_pod_degree:
-        return ring_all_reduce_time(bytes_, n, hw.ici_bw, hw.ici_latency)
+        return intra(bytes_, n)
     n_pods = n // intra_pod_degree
-    t_intra = ring_all_reduce_time(bytes_, intra_pod_degree, hw.ici_bw,
-                                   hw.ici_latency)
+    t_intra = intra(bytes_, intra_pod_degree)
     t_inter = ring_all_reduce_time(bytes_ / intra_pod_degree, n_pods,
                                    hw.dci_bw, hw.dci_latency)
     return t_intra + t_inter
@@ -66,14 +104,19 @@ def hierarchical_all_reduce_time(bytes_: float, n: int, hw: HardwareModel,
 
 def scaling_efficiency(grad_bytes: float, step_compute_time: float, n: int,
                        hw: HardwareModel, *, overlap: float = 0.0,
+                       bucket_bytes: float = 0.0,
                        assume_perfect: bool = False) -> float:
     """SE_N = T_1 / T_N for N-way DP (paper §3.1).
 
     ``assume_perfect`` reproduces the paper's conservative SE_N = 1.
-    ``overlap`` in [0,1): fraction of all-reduce hidden under backward.
+    ``overlap`` in [0,1): fraction of the gradient exchange hidden under
+    backward compute (0 for the monolithic GSPMD all-reduce;
+    ``MEASURED_OVERLAP["overlapped"]`` for the bucketed sync, whose
+    ``bucket_bytes`` also charges the per-bucket alpha cost).
     """
     if assume_perfect or n <= 1:
         return 1.0
-    t_ar = hierarchical_all_reduce_time(grad_bytes, n, hw, hw.chips_per_pod)
+    t_ar = hierarchical_all_reduce_time(grad_bytes, n, hw, hw.chips_per_pod,
+                                        bucket_bytes=bucket_bytes)
     t_ar *= (1.0 - overlap)
     return step_compute_time / (step_compute_time + t_ar)

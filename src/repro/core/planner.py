@@ -82,13 +82,19 @@ class PlannerChoice:
         return self.pods * self.dp
 
 
-def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel) -> float:
+def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel,
+                    comm_runtime: str = "gspmd") -> float:
     """Tensor-MP SU^M on the ICI torus: compute scales 1/m, plus the
     per-layer all-reduce of the (b, s, d) activations (2 per layer fwd, 2 bwd,
-    Megatron pattern).  Uses bytes/FLOP analytics per arch family — the TPU
-    analogue of the paper's measured Table 1 / DLPlacer estimates."""
+    Megatron pattern), with the ring's per-hop latency (alpha) term.  Uses
+    bytes/FLOP analytics per arch family — the TPU analogue of the paper's
+    measured Table 1 / DLPlacer estimates.  ``comm_runtime="overlapped"``
+    hides the measured fraction of the transfer under the chunked
+    collective-matmul's partial matmuls (comm.MEASURED_OVERLAP, calibrated
+    by benchmarks/collective_overlap_sweep.py)."""
     if m <= 1:
         return 1.0
+    from repro.core.comm import MEASURED_OVERLAP, ring_all_reduce_time
     # reference per-device micro-batch: 16 sequences of 4k tokens
     b, s = 16, 4096
     tokens = b * s
@@ -96,7 +102,9 @@ def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel) -> float:
     t_layer = flops / (hw.peak_flops * hw.mfu)
     act_bytes = tokens * cfg.d_model * 2
     n_ar = 4  # 2 fwd + 2 bwd all-reduces per layer (attn + mlp row-parallel)
-    t_ar = n_ar * 2.0 * (m - 1) / m * act_bytes / hw.ici_bw
+    t_ar = n_ar * ring_all_reduce_time(act_bytes, m, hw.ici_bw,
+                                       hw.ici_latency)
+    t_ar *= 1.0 - MEASURED_OVERLAP[comm_runtime]
     return (t_layer) / (t_layer / m + t_ar)
 
 
@@ -156,6 +164,18 @@ def tensor_mp_supported(cfg: ModelConfig) -> bool:
     pipeline parallelism only (§4.4); tensor-MP factorizations are searched
     for the other families."""
     return cfg.family != "rnn"
+
+
+def comm_runtime_supported(cfg: ModelConfig) -> bool:
+    """Does the overlapped collective runtime have an executable tensor-MP
+    path for this arch?  The SAME arch predicate the runtime gates on
+    (``models.transformer.overlapped_arch_supported`` — homogeneous dense
+    decoder blocks) plus the gate-major BigLSTM layer; everything else
+    falls back to GSPMD at runtime, so the planner must not credit it with
+    the matmul overlap (the bucketed DP grad sync is arch-independent and
+    stays available to every pure-DP point)."""
+    from repro.models.transformer import overlapped_arch_supported
+    return cfg.name == "biglstm" or overlapped_arch_supported(cfg)
 
 
 def grad_bytes(cfg: ModelConfig) -> float:
@@ -237,16 +257,30 @@ class HybridPlanner:
                  micro_candidates: Tuple[int, ...] = (2, 4, 8, 16),
                  remat: bool = True,
                  opt_bytes_per_param: Optional[float] = None,
-                 pipe_runtime: str = "scheduled"):
+                 pipe_runtime: str = "scheduled",
+                 comm_runtime: str = "gspmd"):
         self.cfg = cfg
         self.hw = hw
         if pipe_runtime not in ("scheduled", "ad"):
             raise ValueError(f"unknown pipe_runtime {pipe_runtime!r}")
+        if comm_runtime not in ("gspmd", "overlapped"):
+            raise ValueError(f"unknown comm_runtime {comm_runtime!r}")
         # the runtime that will execute pipeline plans: the memory filter
         # must model what the executor actually holds live (the scheduled
         # runtime realizes each schedule's residency bound; AD-through-scan
         # holds all K micro-batches for every schedule)
         self.pipe_runtime = pipe_runtime
+        # the collective runtime that will carry tensor-MP matmuls and the
+        # DP grad sync: "overlapped" hides MEASURED_OVERLAP of the wire time
+        # (chunked collective-matmul rings / bucketed reduce-scatter sync,
+        # with the bucketed alpha cost charged), shifting both SU^M and
+        # SE_N — and with them the DP-vs-hybrid crossover.  The matmul
+        # overlap is only credited to archs the overlapped runtime actually
+        # executes (comm_runtime_supported — everything else runs GSPMD's
+        # monolithic collectives no matter what the plan asks for)
+        self.comm_runtime = comm_runtime
+        self.mp_comm_runtime = (comm_runtime if comm_runtime_supported(cfg)
+                                else "gspmd")
         self.epoch_model = epoch_model
         self.mini_batch = mini_batch
         self.seq_len = seq_len
@@ -262,13 +296,19 @@ class HybridPlanner:
         t1 = step_time_single(cfg, mini_batch, seq_len, hw)
         tensor_ms = (tuple(m for m in mp_candidates if m > 1)
                      if tensor_mp_supported(cfg) else ())
+        from repro.core.comm import MEASURED_OVERLAP
+        from repro.parallel.collectives import DEFAULT_BUCKET_BYTES
         self.run = TrainingRun(
             name=cfg.name, t1=t1, grad_bytes=grad_bytes(cfg),
             mini_batch=mini_batch,
             epoch_model=epoch_model,
             dataset_size=dataset_tokens // seq_len,
-            mp_speedup={m: mp_step_speedup(cfg, m, hw) for m in tensor_ms},
+            mp_speedup={m: mp_step_speedup(cfg, m, hw, self.mp_comm_runtime)
+                        for m in tensor_ms},
             hw=hw, se_perfect=se_perfect,
+            comm_overlap=MEASURED_OVERLAP[comm_runtime],
+            bucket_bytes=(DEFAULT_BUCKET_BYTES
+                          if comm_runtime == "overlapped" else 0.0),
             pipe_speedup={(m, k, sched): pipeline_step_speedup_model(
                               cfg, m, k, hw, mini_batch=mini_batch,
                               seq_len=seq_len, schedule=sched,
@@ -341,6 +381,16 @@ class HybridPlanner:
             su_m = 1.0
         pods = self._pods(total, n)
         dp_axes = ("pod", "data") if pods > 1 else ("data",)
+        # stamp each plan with the comm runtime that will actually carry it:
+        # pure-DP points get the (arch-independent) bucketed sync, tensor
+        # points the matmul rings iff the arch has the overlapped path,
+        # pipeline points their own ppermute rings (comm_runtime inert)
+        if pipe:
+            point_comm = "gspmd"
+        elif m > 1:
+            point_comm = self.mp_comm_runtime
+        else:
+            point_comm = self.comm_runtime
         plan = ParallelPlan(
             dp_axes=dp_axes,
             model_axis="model" if m > 1 else None,
@@ -350,6 +400,7 @@ class HybridPlanner:
             schedule=sched if pipe else "gpipe",
             virtual_stages=v if pipe else 1,
             runtime=self.pipe_runtime,
+            comm_runtime=point_comm,
             remat=self.remat)
         mesh_shape = (pods, n // pods, m) if pods > 1 else (n, m)
         return PlannerChoice(
@@ -377,7 +428,7 @@ class HybridPlanner:
 
     def _se(self, n: int, m: int = 1) -> float:
         from repro.core.analytical import se
-        return se(self.run, n, grad_scale=1.0 / max(m, 1))
+        return se(self.run, n, grad_scale=1.0 / max(m, 1), hybrid=m > 1)
 
     def _eratio(self, n: int) -> float:
         from repro.core.analytical import epochs_ratio

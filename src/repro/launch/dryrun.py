@@ -45,7 +45,9 @@ ADAFACTOR_ARCHS = {"kimi_k2_1t_a32b", "nemotron_4_340b"}
 
 
 def make_plan(arch: str, mesh, plan_name: str, schedule: str = "gpipe",
-              pipe_runtime: str = "scheduled") -> ParallelPlan:
+              pipe_runtime: str = "scheduled",
+              comm_runtime: str = "gspmd",
+              comm_chunks: int = 1) -> ParallelPlan:
     multi = "pod" in mesh.axis_names
     dp_axes = ("pod", "data") if multi else ("data",)
     fsdp = dp_axes if (plan_name == "optimized" or arch in ADAFACTOR_ARCHS) else ()
@@ -62,7 +64,8 @@ def make_plan(arch: str, mesh, plan_name: str, schedule: str = "gpipe",
                             virtual_stages=2 if schedule == "interleaved" else 1,
                             runtime=pipe_runtime,
                             fsdp_axes=tuple(fsdp))
-    return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp))
+    return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp),
+                        comm_runtime=comm_runtime, comm_chunks=comm_chunks)
 
 
 def make_optimizer(arch: str):
@@ -162,14 +165,22 @@ def _unrolled_variant(cfg, n_layers: int):
 def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
                   plan_name: str = "baseline", skip_analysis: bool = False,
                   unroll_analysis: bool = True, schedule: str = "gpipe",
-                  pipe_runtime: str = "scheduled"):
+                  pipe_runtime: str = "scheduled",
+                  comm_runtime: str = "gspmd", comm_chunks: int = 1):
     """Run the dry-run for one (arch, shape, mesh) and return the record."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     plan = make_plan(arch, mesh, plan_name, schedule=schedule,
-                     pipe_runtime=pipe_runtime)
+                     pipe_runtime=pipe_runtime, comm_runtime=comm_runtime,
+                     comm_chunks=comm_chunks)
+    if comm_runtime != "gspmd":
+        rec_comm = {"comm_runtime": comm_runtime, "comm_chunks": comm_chunks}
+        print(f"  [comm] runtime={comm_runtime} chunks={comm_chunks}",
+              flush=True)
+    else:
+        rec_comm = None
     if plan.is_pipeline:
         # the 1-/2-layer unroll artifacts cannot be partitioned into the
         # 16-stage pipeline; per-layer cost deltas are tensor-plan-only
@@ -178,6 +189,8 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
            "plan": plan_name,
            "plan_detail": plan.describe(mesh)}
+    if rec_comm:
+        rec["comm"] = rec_comm
     if plan.is_pipeline:
         # the schedule's predicted idle fraction and activation residency
         # (keyed off the runtime that will execute it), printed next to the
@@ -281,6 +294,15 @@ def main():
                     choices=["scheduled", "ad"],
                     help="pipeline runtime for --plan pipeline (default "
                          "scheduled: the hand-scheduled fwd+bwd executor)")
+    ap.add_argument("--comm-runtime", default=None,
+                    choices=["gspmd", "overlapped"],
+                    help="collective runtime for the tensor-MP plans: "
+                         "'overlapped' compiles the Megatron matmuls "
+                         "through parallel.collectives' chunked ppermute "
+                         "rings (train shapes); default gspmd")
+    ap.add_argument("--comm-chunks", type=int, default=1,
+                    help="ring chunks per shard for --comm-runtime "
+                         "overlapped")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-analysis", action="store_true")
     args = ap.parse_args()
@@ -296,8 +318,17 @@ def main():
                     f"[plan] {flag} {val} only applies to --plan pipeline "
                     f"(got --plan {args.plan}); drop the flag or select the "
                     f"pipeline plan")
+    elif args.comm_runtime is not None or args.comm_chunks != 1:
+        raise SystemExit(
+            "[plan] --comm-runtime/--comm-chunks apply to the tensor-MP "
+            "plans (baseline/optimized); pipeline stages exchange "
+            "activations over their own ppermute rings (see --pipe-runtime)")
+    if args.comm_chunks != 1 and args.comm_runtime != "overlapped":
+        raise SystemExit("[plan] --comm-chunks only applies with "
+                         "--comm-runtime overlapped")
     sched = args.sched or "gpipe"
     pipe_runtime = args.pipe_runtime or "scheduled"
+    comm_runtime = args.comm_runtime or "gspmd"
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
@@ -319,6 +350,8 @@ def main():
                         print(f"[skip] {arch}__{shape} (pipeline n/a)")
                         continue
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}__{args.plan}"
+                if comm_runtime != "gspmd":
+                    tag += f"__{comm_runtime}"
                 out_path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(out_path):
                     print(f"[skip] {tag} (cached)")
@@ -331,7 +364,9 @@ def main():
                                         plan_name=args.plan,
                                         skip_analysis=args.skip_analysis or multi,
                                         schedule=sched,
-                                        pipe_runtime=pipe_runtime)
+                                        pipe_runtime=pipe_runtime,
+                                        comm_runtime=comm_runtime,
+                                        comm_chunks=args.comm_chunks)
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)
                     r = rec["roofline"]

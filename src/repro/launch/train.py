@@ -7,6 +7,8 @@
         --reduced --steps 100
     python -m repro.launch.train --arch biglstm --parallel pipe=2,micro=4 \
         --reduced
+    python -m repro.launch.train --arch llama3_2_1b --parallel dp=2,mp=2 \
+        --reduced --comm-runtime overlapped --comm-chunks 2
 
 ``--parallel auto`` invokes the paper's HybridPlanner — the unified search
 over DP x tensor-MP x pipeline-MP x schedule factorizations of the device
@@ -20,6 +22,12 @@ launcher forces dp*stages host devices before jax initializes.  Explicit
 ``dp=/mp=/accum=`` or ``pipe=/micro=/sched=/v=/dp=`` specs override the
 search.  ``--reduced`` shrinks the arch (2 layers, small dims) for the CPU
 container.
+
+Tensor-MP and multi-DP plans likewise execute on a real local dp x mp mesh
+(forced host devices on CPU); ``--comm-runtime overlapped`` selects the
+overlap-scheduled collective runtime (``parallel.collectives``: chunked
+collective-matmul rings for the Megatron matmuls, bucketed reduce-scatter
+DP grad sync), ``gspmd`` being the monolithic-collective escape hatch.
 """
 from __future__ import annotations
 
@@ -32,19 +40,21 @@ from repro.core.planner import HybridPlanner, default_epoch_model
 from repro.parallel.plan import ParallelPlan
 
 
-def parse_parallel(spec: str, devices: int, cfg):
+def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd"):
     """Resolve a --parallel spec to (plan, mp_degree, dp_hint).
 
     ``dp_hint`` is the projected DP degree the launcher should realize (the
     planner's pods*dp, or an explicit ``dp=`` key); the executable mesh
     clamps it to the local machine.  Pure planning — no jax device access,
     so the launcher can still force host devices afterwards for pipeline
-    execution.
+    execution.  ``comm_runtime`` keys the auto search's overlap terms (the
+    planner stamps each point with the runtime that will actually carry it).
     """
     from repro.models.api import supports_pipeline
 
     if spec == "auto":
-        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                                comm_runtime=comm_runtime)
         choices = planner.choices(devices)
         if not choices:
             raise SystemExit(f"[planner] no memory-feasible strategy for "
@@ -119,26 +129,81 @@ def main():
                          "residency; 'ad' keeps jax.grad through the "
                          "forward scan (GPipe-like memory) for bit-for-bit "
                          "differential testing")
+    ap.add_argument("--comm-runtime", choices=["gspmd", "overlapped"],
+                    default=None,
+                    help="collective runtime for tensor-MP matmuls and the "
+                         "DP gradient sync: 'overlapped' routes the Megatron "
+                         "row/column matmuls through the chunked "
+                         "collective-matmul ppermute rings and the grad "
+                         "exchange through the bucketed reduce-scatter sync "
+                         "(parallel.collectives); 'gspmd' (default) leaves "
+                         "both to the partitioner's monolithic collectives")
+    ap.add_argument("--comm-chunks", type=int, default=None,
+                    help="ring chunks per shard for --comm-runtime "
+                         "overlapped (default 1; more chunks = finer "
+                         "overlap, more per-hop latency)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     budget = args.devices or 256
-    plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg)
+    plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg,
+                                       comm_runtime=args.comm_runtime
+                                       or "gspmd")
     if args.pipe_runtime:
         if not plan.is_pipeline:
             raise SystemExit("[plan] --pipe-runtime only applies to pipeline "
                              "plans (--parallel pipe=... or a planner choice "
                              "with kind=pipeline)")
         plan = dataclasses.replace(plan, runtime=args.pipe_runtime)
+    if args.comm_runtime or args.comm_chunks:
+        if args.comm_chunks and (args.comm_runtime or plan.comm_runtime) \
+                != "overlapped":
+            raise SystemExit("[plan] --comm-chunks only applies with "
+                             "--comm-runtime overlapped")
+        if plan.is_pipeline and mp > 1:
+            if args.parallel != "auto":
+                raise SystemExit(
+                    "[plan] --comm-runtime/--comm-chunks apply to tensor-MP "
+                    "/ DP plans; pipeline stages exchange activations over "
+                    "their own ppermute rings (see --pipe-runtime)")
+            # planner chose pipeline: the collective runtime is inert there
+            print("[plan] note: planner chose a pipeline plan; "
+                  "--comm-runtime/--comm-chunks do not apply to it")
+        else:
+            # auto plans already carry the planner's per-point runtime stamp
+            # (gspmd for archs the overlapped runtime cannot execute)
+            plan = dataclasses.replace(
+                plan,
+                comm_runtime=(plan.comm_runtime if args.parallel == "auto"
+                              else (args.comm_runtime or plan.comm_runtime)),
+                comm_chunks=args.comm_chunks or plan.comm_chunks)
 
     # Pipeline plans need a real mesh axis with one device per stage plus as
     # much of the projected DP degree as fits locally; size the executable
     # dp x stages mesh to the local machine, then (on CPU) force that many
-    # host devices BEFORE any jax backend init below.
+    # host devices BEFORE any jax backend init below.  Tensor-MP / multi-DP
+    # plans likewise get a real local dp x mp mesh (capped by
+    # --max-local-devices) so the collective runtime selected by
+    # --comm-runtime actually executes.
     pipeline = plan.is_pipeline and mp > 1
+    spmd = (not pipeline) and (mp > 1 or dp_hint > 1)
     dp = 1
+
+    def clamp_dp(what: str) -> int:
+        """Realize as much of the projected DP degree as the local budget
+        affords; dp must divide the batch (it is sharded over "data")."""
+        dp_cap = min(max(dp_hint, 1), max(1, args.max_local_devices // mp))
+        got = max(d for d in range(1, dp_cap + 1) if args.batch % d == 0)
+        if got < dp_hint:
+            print(f"[plan] clamped DP {dp_hint} -> {got} "
+                  f"(local budget {args.max_local_devices}, {what})")
+        return got
+
+    if spmd:
+        dp = clamp_dp(f"{mp}-way MP")
+        _ensure_host_devices(dp * mp)
     if pipeline:
         from repro.models.api import pipeline_applicable
         if not pipeline_applicable(cfg, mp, plan.virtual_stages):
@@ -146,13 +211,7 @@ def main():
                 f"[plan] {cfg.name}: {mp} pipeline stages (x{max(plan.virtual_stages, 1)} "
                 f"chunks) need a supported arch with n_layers % (stages*v) "
                 f"== 0 (n_layers={cfg.n_layers})")
-        # realize as much DP as the local budget affords: dp must divide the
-        # batch (each micro-batch is sharded over the data axis)
-        dp_cap = min(max(dp_hint, 1), max(1, args.max_local_devices // mp))
-        dp = max(d for d in range(1, dp_cap + 1) if args.batch % d == 0)
-        if dp < dp_hint:
-            print(f"[plan] clamped DP {dp_hint} -> {dp} "
-                  f"(local budget {args.max_local_devices}, {mp} stages)")
+        dp = clamp_dp(f"{mp} stages")
         # the planner models micro-batches against its reference batch; the
         # executed run must use a count that divides the per-dp-shard batch
         shard_b = args.batch // dp
@@ -173,11 +232,12 @@ def main():
     from repro.optim import adamw, warmup_cosine
     from repro.parallel.jaxcompat import set_mesh
     from repro.train.loop import LoopConfig, train_loop
-    from repro.train.steps import (init_train_state, make_train_step)
+    from repro.train.steps import (_make_pctx, init_train_state,
+                                   make_train_step, shardings_for)
 
-    if pipeline:
+    if pipeline or spmd:
         if jax.device_count() < dp * mp:
-            raise SystemExit(f"[mesh] pipeline plan needs {dp * mp} devices, "
+            raise SystemExit(f"[mesh] plan needs {dp * mp} devices, "
                              f"have {jax.device_count()} "
                              f"(jax initialized early?)")
         mesh = make_mesh(dp=dp, mp=mp)
@@ -194,7 +254,7 @@ def main():
     print(f"[data] markov-lm entropy floor = {data.entropy:.4f} nats/token")
 
     opt = adamw(warmup_cosine(args.lr, 20, args.steps))
-    pctx = None
+    pctx = _make_pctx(mesh, plan, batch_shardable=dp > 1) if spmd else None
     train_step = make_train_step(api, opt, mesh=mesh, plan=plan, pctx=pctx)
     state = init_train_state(api, opt, jax.random.PRNGKey(0))
     if pipeline and dp > 1:
@@ -204,6 +264,17 @@ def main():
         state_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
         batch_sh = {"tokens": NamedSharding(mesh, P("data", None)),
                     "labels": NamedSharding(mesh, P("data", None))}
+        train_step = jax.jit(train_step, donate_argnums=(0,),
+                             in_shardings=(state_sh, batch_sh))
+    elif spmd:
+        # tensor-MP / multi-DP: params via ShardingRules (Megatron
+        # column/row specs on the model axis), batch over the data axis;
+        # the comm runtime selected on the plan decides whether GSPMD or
+        # parallel.collectives carries the resulting collectives
+        i32 = jax.numpy.int32
+        specs = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq), i32),
+                 "labels": jax.ShapeDtypeStruct((args.batch, args.seq), i32)}
+        state_sh, batch_sh = shardings_for(api, mesh, plan, opt, specs)
         train_step = jax.jit(train_step, donate_argnums=(0,),
                              in_shardings=(state_sh, batch_sh))
     else:

@@ -296,7 +296,7 @@ def build_model(cfg: ModelConfig, *, rwkv_chunked: bool = True,
             return lstm_mod.biglstm_init(key, cfg)
 
         def loss_fn(params, batch, pctx=None):
-            logits = lstm_mod.biglstm_forward(cfg, params, batch)
+            logits = lstm_mod.biglstm_forward(cfg, params, batch, pctx=pctx)
             loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
             return loss, {"loss": loss}
 

@@ -238,6 +238,32 @@ def mlp_apply(params, x, kind: str):
     return h @ params["wo"].astype(x.dtype)
 
 
+def mlp_apply_overlapped(params, x, kind: str, *, axis: str, axis_size: int,
+                         chunks: int = 1):
+    """Megatron column/row-parallel MLP on the overlap-scheduled collective
+    rings (``parallel.collectives``), for use INSIDE a shard_map: ``x`` is
+    (..., T/m, d) sequence-sharded over ``axis``; ``wi``/``wg`` are this
+    shard's column slices, ``wo`` the row slice.  The gate and up projections
+    share one gather ring (their weights are concatenated so x travels the
+    ring once).  Returns (..., T/m, d) sequence-sharded."""
+    from repro.parallel.collectives import (all_gather_matmul,
+                                            matmul_reduce_scatter)
+    kw = dict(axis=axis, axis_size=axis_size, chunks=chunks)
+    if kind == "swiglu":
+        ff = params["wi"].shape[1]
+        w2 = jnp.concatenate([params["wg"], params["wi"]], axis=1)
+        gi = all_gather_matmul(x, w2.astype(x.dtype), **kw)
+        h = jax.nn.silu(gi[..., :ff]) * gi[..., ff:]
+    elif kind == "gelu":
+        h = jax.nn.gelu(all_gather_matmul(x, params["wi"].astype(x.dtype), **kw))
+    elif kind == "sqrelu":
+        h = jnp.square(jax.nn.relu(
+            all_gather_matmul(x, params["wi"].astype(x.dtype), **kw)))
+    else:
+        raise ValueError(kind)
+    return matmul_reduce_scatter(h, params["wo"].astype(x.dtype), **kw)
+
+
 # ---------------------------------------------------------------------------
 # sequence-sharded decode attention (flash-decode, §Perf iteration B.2)
 # ---------------------------------------------------------------------------

@@ -78,6 +78,106 @@ def lstm_layer(p, xs, state=None):
     return ys.transpose(1, 0, 2), state
 
 
+def lstm_layer_overlapped(p, xs, *, mesh, axis: str, batch_axes=(),
+                          chunks: int = 1):
+    """Megatron tensor-MP LSTM layer on the overlap-scheduled collective
+    rings (``parallel.collectives``): the time-parallel input projection
+    ``x @ wx`` — the layer's dominant matmul — rides an
+    ``all_gather_matmul`` ring over the TIME dim with gate-major hidden
+    sharding (each shard owns a dh/m slice of every gate, so the cell
+    nonlinearities stay shard-local); the recurrence keeps h replicated
+    (``wh`` column-sharded, no comm per step) and the cell state c sharded.
+    The per-step output projection (``wp``, row-parallel) psums — the
+    recurrent dependence serializes it, which is exactly the exposed-MP-comm
+    term the paper measures for the RNN models; cells without a projection
+    all-gather their sharded hidden instead.  xs: (B, T, d_in) with
+    T % axis_size == 0.  Returns (ys, (h, c)) like ``lstm_layer``."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.collectives import all_gather_matmul
+    from repro.parallel.jaxcompat import shard_map
+
+    m = mesh.shape[axis]
+    b, t, d_in = xs.shape
+    d_h = p["wx"].shape[1] // 4
+    have_wp = "wp" in p
+    d_out = p["wp"].shape[1] if have_wp else d_h
+    dhm = d_h // m
+    baxes = tuple(a for a in batch_axes if a)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+    bspec = baxes if (baxes and dp > 1 and b % dp == 0) else None
+
+    # gate-major view: (d, 4*dh) -> (d, 4, dh) so the model axis shards the
+    # hidden dim of every gate instead of splitting whole gates apart
+    wx3 = p["wx"].reshape(d_in, 4, d_h)
+    wh3 = p["wh"].reshape(d_out, 4, d_h)
+    b2 = p["b"].reshape(4, d_h)
+    h0 = jnp.zeros((b, d_out), xs.dtype)
+    c0 = jnp.zeros((b, d_h), xs.dtype)
+
+    def local(wx_l, wh_l, b_l, wp_l, xs_l, h0_l, c0_l):
+        dt = xs_l.dtype
+        gates_x = all_gather_matmul(
+            xs_l, wx_l.reshape(d_in, 4 * dhm).astype(dt),
+            axis=axis, axis_size=m, chunks=chunks)          # (b, T, 4*dh/m)
+        wh_f = wh_l.reshape(d_out, 4 * dhm).astype(dt)
+        b_f = b_l.reshape(4 * dhm).astype(dt)
+
+        def step(st, gx):
+            h, c = st
+            gates = gx + h @ wh_f + b_f
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            out = jax.nn.sigmoid(o) * jnp.tanh(c)           # (b, dh/m)
+            if wp_l is not None:
+                h = jax.lax.psum(out @ wp_l.astype(dt), axis)
+            else:
+                h = jax.lax.all_gather(out, axis, axis=-1, tiled=True)
+            return (h, c), h
+
+        (h, c), ys = jax.lax.scan(step, (h0_l, c0_l),
+                                  gates_x.transpose(1, 0, 2))
+        return ys.transpose(1, 0, 2), h, c
+
+    gate_spec = P(None, None, axis)
+    specs = [gate_spec, gate_spec, P(None, axis)]
+    args = [wx3, wh3, b2]
+    if have_wp:
+        specs.append(P(axis, None))
+        args.append(p["wp"])
+        fn = local
+    else:
+        specs.append(P())
+        args.append(jnp.zeros((), xs.dtype))
+
+        def fn(wx_l, wh_l, b_l, _unused, xs_l, h0_l, c0_l):
+            return local(wx_l, wh_l, b_l, None, xs_l, h0_l, c0_l)
+
+    specs += [P(bspec, axis, None), P(bspec, None), P(bspec, axis)]
+    args += [xs, h0, c0]
+    ys, h, c = shard_map(
+        fn, mesh=mesh, in_specs=tuple(specs),
+        out_specs=(P(bspec, None, None), P(bspec, None), P(bspec, axis)))(
+            *args)
+    return ys, (h, c)
+
+
+def lstm_overlapped_ok(cfg, pctx, t: int) -> bool:
+    """Gate for the overlapped tensor-MP LSTM path: a real model axis, the
+    hidden dim divisible by it (gate-major sharding), and the time dim
+    divisible (the input projection rides a time-dim gather ring)."""
+    if (pctx is None or getattr(pctx, "comm_runtime", "gspmd") != "overlapped"
+            or pctx.mesh is None or pctx.model_axis is None):
+        return False
+    m = pctx.mesh.shape[pctx.model_axis]
+    if m <= 1:
+        return False
+    chunks = max(getattr(pctx, "comm_chunks", 1), 1)
+    return (cfg.d_ff % m == 0 and t % m == 0 and (t // m) % chunks == 0)
+
+
 # ---------------------------------------------------------------------------
 # GNMT
 # ---------------------------------------------------------------------------
@@ -139,11 +239,29 @@ def biglstm_init(key, cfg):
     }
 
 
-def biglstm_forward(cfg, params, batch):
+def biglstm_forward(cfg, params, batch, pctx=None):
     dt = jnp.dtype(cfg.dtype)
     x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    overlapped = lstm_overlapped_ok(cfg, pctx, batch["tokens"].shape[1])
+    if (not overlapped and pctx is not None
+            and getattr(pctx, "comm_runtime", "gspmd") == "overlapped"
+            and pctx.mesh is not None and pctx.model_axis is not None
+            and pctx.mesh.shape[pctx.model_axis] > 1):
+        import warnings
+        warnings.warn(
+            f"[collectives] biglstm: comm_runtime='overlapped' requested but "
+            f"the overlapped LSTM layer cannot engage (needs hidden "
+            f"({cfg.d_ff}) and seq ({batch['tokens'].shape[1]}) divisible "
+            f"by the model axis and (seq/mp) % comm_chunks == 0); falling "
+            f"back to GSPMD's monolithic collectives", stacklevel=2)
     for lp in params["lstm"]:
-        y, _ = lstm_layer(lp, x)
+        if overlapped:
+            y, _ = lstm_layer_overlapped(
+                lp, x, mesh=pctx.mesh, axis=pctx.model_axis,
+                batch_axes=tuple(a for a in pctx.batch_axes if a),
+                chunks=max(pctx.comm_chunks, 1))
+        else:
+            y, _ = lstm_layer(lp, x)
         x = x + y
     return x @ params["head"].astype(dt)
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -39,6 +40,11 @@ class ParallelCtx:
     batch_axes: tuple = ("data",)     # mesh axes the batch dim is sharded over
     model_axis: Optional[str] = None  # None => mp=1, no shard_map
     moe_ff_axes: tuple = ()           # decode: 2D expert sharding (§Perf B)
+    # tensor-MP collective runtime: "gspmd" lets the partitioner insert
+    # monolithic all-reduces around the Megatron matmuls; "overlapped" routes
+    # them through parallel.collectives' chunked ppermute rings
+    comm_runtime: str = "gspmd"
+    comm_chunks: int = 1              # ring chunks per shard (overlapped)
 
     @property
     def ep(self) -> bool:
@@ -446,6 +452,120 @@ def block_apply(cfg, p, x, *, mode: str, window: int, pos0, cache=None,
 
 
 # ---------------------------------------------------------------------------
+# overlapped tensor-MP block (comm_runtime="overlapped")
+# ---------------------------------------------------------------------------
+
+def overlapped_arch_supported(cfg) -> bool:
+    """Arch classes whose decoder block the overlap-scheduled collective
+    matmuls can execute: homogeneous dense blocks only (no MoE / SSM / RWKV
+    / enc-dec / VLM prefix / CNN / RNN).  ONE predicate shared by the
+    runtime gate below and the planner's credit gate
+    (``core.planner.comm_runtime_supported``) so the two can never drift —
+    the planner must not credit an overlap the runtime will not execute."""
+    return not (cfg.is_moe or cfg.rwkv
+                or cfg.family in ("hybrid", "ssm", "cnn", "rnn")
+                or cfg.encoder_layers or cfg.n_prefix_embeds)
+
+
+def overlapped_supported(cfg, pctx: Optional[ParallelCtx],
+                         t: int) -> bool:
+    """Can this (arch, mesh, shape) run the overlap-scheduled collective
+    matmuls?  Requires ``overlapped_arch_supported``, q heads and FFN hidden
+    divisible by the model axis, and the sequence divisible so the residual
+    stream can stay sequence-sharded between blocks.  Anything else falls
+    back to GSPMD — the ShardingRules fallback warning makes the perf cliff
+    visible."""
+    if (pctx is None or pctx.comm_runtime != "overlapped"
+            or pctx.mesh is None or pctx.model_axis is None):
+        return False
+    msz = pctx.mesh.shape[pctx.model_axis]
+    if msz <= 1:
+        return False
+    if not overlapped_arch_supported(cfg):
+        return False
+    return (cfg.n_heads > 0 and cfg.n_heads % msz == 0
+            and cfg.d_ff % msz == 0 and t % msz == 0
+            and t // msz % max(pctx.comm_chunks, 1) == 0)
+
+
+def _self_attention_overlapped(p, x, cfg, *, window: int, axis: str, msz: int,
+                               chunks: int):
+    """Self-attention with q/k/v/o on the collective-matmul rings, for use
+    inside the block shard_map.  ``x``: (B, T/m, d) sequence-sharded.  Query
+    heads shard over ``axis``; KV heads shard too when divisible, otherwise
+    every shard computes the full (small, GQA) KV from the gathered x —
+    both cases ride the single qkv gather ring.  Output returns through a
+    ``matmul_reduce_scatter`` (row-parallel wo)."""
+    from repro.parallel.collectives import (all_gather_matmul,
+                                            matmul_reduce_scatter)
+    b, t_loc, d = x.shape
+    t = t_loc * msz
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hpm = nh // msz
+    kv_sharded = nkv % msz == 0
+    kvpm = nkv // msz if kv_sharded else nkv
+    kw = dict(axis=axis, axis_size=msz, chunks=chunks)
+    # one gather ring computes q (sharded) and k/v (sharded or replicated)
+    w_qkv = jnp.concatenate(
+        [p["wq"].astype(x.dtype), p["wk"].astype(x.dtype),
+         p["wv"].astype(x.dtype)], axis=1)
+    qkv = all_gather_matmul(x, w_qkv, **kw)              # (b, t, ...)
+    q = qkv[..., :hpm * hd].reshape(b, t, hpm, hd)
+    k = qkv[..., hpm * hd:(hpm + kvpm) * hd].reshape(b, t, kvpm, hd)
+    v = qkv[..., (hpm + kvpm) * hd:].reshape(b, t, kvpm, hd)
+    positions = jnp.arange(t)
+    q = L.apply_rope(q, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
+    k = L.apply_rope(k, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
+    if not kv_sharded:
+        # replicated KV: take the q-head-aligned slice of the repeated heads
+        j = jax.lax.axis_index(axis)
+        k = jax.lax.dynamic_slice_in_dim(L.repeat_kv(k, nh // nkv),
+                                         j * hpm, hpm, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(L.repeat_kv(v, nh // nkv),
+                                         j * hpm, hpm, axis=2)
+    out = L.attention(q, k, v, causal=True, q_start=0, window=window,
+                      softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, t, hpm * hd)
+    return matmul_reduce_scatter(out, p["wo"].astype(x.dtype), **kw)
+
+
+def overlapped_block_apply(cfg, p, x, *, window: int,
+                           pctx: ParallelCtx):
+    """One dense decoder block with every Megatron matmul on the chunked
+    collective rings, the residual stream sequence-sharded over the model
+    axis end to end (train mode): ln1 -> qkv gather ring -> attention (full
+    sequence per head shard) -> wo reduce ring -> residual -> ln2 -> MLP
+    gather/reduce rings -> residual.  ``x`` enters and leaves (B, T, d)
+    GSPMD-global, sharded P(batch, model, None) — stacking these blocks in
+    the layer scan keeps the hot path free of monolithic collectives."""
+    mesh, axis = pctx.mesh, pctx.model_axis
+    msz = mesh.shape[axis]
+    chunks = max(pctx.comm_chunks, 1)
+    baxes = tuple(a for a in pctx.batch_axes if a)
+    bspec = baxes if (baxes and _batch_div(x.shape[0], pctx, baxes)) else None
+    kv_sharded = cfg.n_kv_heads % msz == 0
+
+    def local(lp, xl):
+        h = L.rms_norm(xl, lp["ln1"], cfg.norm_eps)
+        xl = xl + _self_attention_overlapped(lp["attn"], h, cfg,
+                                             window=window, axis=axis,
+                                             msz=msz, chunks=chunks)
+        h2 = L.rms_norm(xl, lp["ln2"], cfg.norm_eps)
+        return xl + L.mlp_apply_overlapped(lp["mlp"], h2, cfg.mlp_kind,
+                                           axis=axis, axis_size=msz,
+                                           chunks=chunks)
+
+    col, row = P(None, axis), P(axis, None)
+    kv = col if kv_sharded else P(None, None)
+    p_specs = {"ln1": P(None), "ln2": P(None),
+               "attn": {"wq": col, "wk": kv, "wv": kv, "wo": row},
+               "mlp": {k: (row if k == "wo" else col) for k in p["mlp"]}}
+    xspec = P(bspec, axis, None)
+    return shard_map(local, mesh=mesh, in_specs=(p_specs, xspec),
+                     out_specs=xspec)(p, x)
+
+
+# ---------------------------------------------------------------------------
 # encoder (whisper)
 # ---------------------------------------------------------------------------
 
@@ -519,12 +639,33 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
         cache_tmpl = make_cache(cfg, tokens.shape[0], cache_capacity or x.shape[1],
                                 window=window, dtype=jnp.dtype(cfg.dtype))
 
+    overlapped = (not prefill
+                  and overlapped_supported(cfg, pctx, x.shape[1]))
+    if (not overlapped and not prefill and pctx is not None
+            and pctx.comm_runtime == "overlapped"
+            and pctx.mesh is not None and pctx.model_axis is not None
+            and pctx.mesh.shape[pctx.model_axis] > 1):
+        # an explicitly requested runtime silently running something else is
+        # the same perf cliff the ShardingRules fallback warning exposes
+        mp = pctx.mesh.shape[pctx.model_axis]
+        warnings.warn(
+            f"[collectives] {cfg.name}: comm_runtime='overlapped' requested "
+            f"but the overlapped block cannot engage (needs a homogeneous "
+            f"dense decoder with n_heads ({cfg.n_heads}) and d_ff "
+            f"({cfg.d_ff}) divisible by the {mp}-way model axis, seq "
+            f"({x.shape[1]}) % {mp} == 0 and (seq/mp) % comm_chunks "
+            f"({pctx.comm_chunks}) == 0); falling back to GSPMD's "
+            f"monolithic collectives", stacklevel=2)
+
     def body(carry, lp_and_cache):
         x, aux = carry
         if prefill:
             lp, csl = lp_and_cache
         else:
             lp, csl = lp_and_cache, None
+        if overlapped:
+            x = overlapped_block_apply(cfg, lp, x, window=window, pctx=pctx)
+            return (x, aux), 0
         x, c_new, a = block_apply(cfg, lp, x, mode="prefill" if prefill else "train",
                                   window=window, pos0=0, cache=csl,
                                   enc_out=enc_out, pctx=pctx,

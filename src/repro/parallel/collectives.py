@@ -1,0 +1,329 @@
+"""Overlap-scheduled collective subsystem: chunked collective-matmul rings for
+tensor-MP and bucketed reduce-scatter gradient sync for DP.
+
+GSPMD lowers the Megatron row/column-parallel matmul pair to *monolithic*
+collectives: a blocking all-reduce after every row-parallel matmul (forward
+and backward), with zero overlap between the transfer and the partial matmuls
+that feed it.  This module replaces that hot path with hand-scheduled
+``ppermute`` rings of shard-sized chunks — the collective-matmul decomposition
+— so partial matmuls run concurrently with in-flight transfers, plus a
+ZeRO-style bucketed reduce-scatter/all-gather gradient sync for the DP axes.
+``ParallelPlan(comm_runtime="overlapped")`` selects this runtime;
+``"gspmd"`` (the default) is the escape hatch.
+
+Collective-matmul rings (m shards on the model axis, c chunks per shard)
+=======================================================================
+
+``all_gather_matmul``  (column-parallel: x seq-sharded, W column-sharded)::
+
+    y[:, T] = all_gather(x) @ W_loc     decomposed as, on device j at step s
+    (payload: the x-chunk originally resident on shard (j - s) mod m):
+
+        s:   0      1      2      3                       (m = 4)
+      j=0:  x0@W   x3@W   x2@W   x1@W      each step the held chunk is
+      j=1:  x1@W   x0@W   x3@W   x2@W      matmul'd into its output rows
+      j=2:  x2@W   x1@W   x0@W   x3@W      WHILE the ppermute of that chunk
+      j=3:  x3@W   x2@W   x1@W   x0@W      to shard j+1 is in flight
+
+``matmul_reduce_scatter``  (row-parallel: W row-sharded, output seq-scattered)::
+
+    y_j[T/m] = rows j of sum_i (h_i @ W_i)   as a reduce ring: the partial
+    accumulator for chunk (j - 1 - s) mod m arrives at device j at step s,
+    j's own partial matmul for that chunk is added, and the sum moves on;
+    after m-1 hops device j holds the fully-reduced chunk j.
+
+Both run forward AND backward (``jax.custom_vjp``): the backward of
+``all_gather_matmul`` is a ``matmul_reduce_scatter`` of the output cotangent
+(for dx) fused with a second gather ring (for dW, Megatron-style activation
+re-gather instead of stashing the gathered x); the backward of
+``matmul_reduce_scatter`` is one gather ring producing dh and dW together.
+
+Overlap model / chunk-count tradeoff (B bytes over the ring, c chunks/shard,
+alpha = per-hop launch+rendezvous latency, bw = per-hop bandwidth):
+
+    ==================  =====================  ===========================
+    path                wire bytes per chip    exposed (non-overlap) time
+    ==================  =====================  ===========================
+    GSPMD all-reduce    2 (m-1)/m * B          2 (m-1)/m * B/bw + (m-1) a
+    ring all-gather     (m-1)/m * B            max(chunk_mm, chunk_xfer)
+      / reduce-scatter                           + c (m-1) a  (fill/drain)
+    ==================  =====================  ===========================
+
+Larger c => finer pipelining of the first/last chunk (smaller fill bubble)
+but c*(m-1) latency terms; c = 1..2 is right when the per-chunk matmul time
+dominates alpha, larger c only pays off for very large shards.  The measured
+overlap constant lives in ``core.comm.MEASURED_OVERLAP`` and is calibrated
+by ``benchmarks/collective_overlap_sweep.py`` (BENCH_collectives.json).
+
+Bucketed DP gradient sync
+=========================
+
+``bucketed_grad_sync`` partitions the flattened gradient pytree (reverse
+traversal order — the order the backward retires them) into size-targeted
+buckets and issues one ``psum_scatter`` + ``all_gather`` pair per bucket
+(ZeRO-style split of the monolithic all-reduce), hierarchically across pods
+(reduce-scatter intra-pod, psum across pods, all-gather intra-pod — the
+``core.comm.hierarchical_all_reduce_time`` schedule).  Per-bucket collectives
+expose the overlap opportunity a single fused all-reduce denies the
+scheduler: bucket k's reduce-scatter can run while bucket k+1's gradients
+are still being produced by the remaining backward compute.
+
+Everything here executes INSIDE a ``shard_map`` over the mesh; the functions
+take the model-axis name and its (static) size explicitly so the ring loops
+unroll at trace time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Size target for one DP gradient bucket (torch-DDP-style default: large
+# enough to amortize per-collective latency, small enough that several
+# buckets are in flight over one backward).
+DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
+
+
+def _ring_perm(m: int):
+    return [(i, (i + 1) % m) for i in range(m)]
+
+
+def _split_rows(x, chunks: int):
+    """Split the second-to-last (row) dim into ``chunks`` equal pieces."""
+    t = x.shape[-2]
+    if t % chunks:
+        raise ValueError(f"chunk count {chunks} does not divide rows {t}")
+    return [lax.slice_in_dim(x, i * (t // chunks), (i + 1) * (t // chunks),
+                             axis=-2) for i in range(chunks)]
+
+
+def _flat2(x):
+    """(..., T, D) -> (prod(...), T, D) for batch-summed weight grads."""
+    return x.reshape((-1,) + x.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# all_gather(x) @ W  as a chunked ppermute ring
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _ag_mm(axis, axis_size, chunks, x, w):
+    return _ag_mm_fwd(axis, axis_size, chunks, x, w)[0]
+
+
+def _ag_mm_fwd(axis, axis_size, chunks, x, w):
+    m = axis_size
+    j = lax.axis_index(axis)
+    t_loc = x.shape[-2]
+    piece = t_loc // chunks
+    out = jnp.zeros(x.shape[:-2] + (t_loc * m, w.shape[-1]),
+                    jnp.result_type(x.dtype, w.dtype))
+    perm = _ring_perm(m)
+    pieces = _split_rows(x, chunks)
+    for s in range(m):
+        src = (j - s) % m
+        nxt = ([lax.ppermute(p, axis, perm) for p in pieces]
+               if s < m - 1 else None)                 # send before compute
+        for ci, p in enumerate(pieces):
+            out = lax.dynamic_update_slice_in_dim(
+                out, p @ w, src * t_loc + ci * piece, axis=-2)
+        pieces = nxt
+    return out, (x, w)
+
+
+def _ag_mm_bwd(axis, axis_size, chunks, res, dy):
+    x, w = res
+    m = axis_size
+    j = lax.axis_index(axis)
+    t_loc = x.shape[-2]
+    piece = t_loc // chunks
+    # dx: rows of sum_j dy_j @ W_j^T, reduce-scattered back to this shard
+    dx = _mm_rs(axis, m, chunks, dy, w.swapaxes(-1, -2))
+    # dW = all_gather(x)^T @ dy: re-gather x on a second ring (Megatron-style
+    # recompute — stashing the gathered x would m-fold its activation memory)
+    dw = jnp.zeros(w.shape, w.dtype)
+    perm = _ring_perm(m)
+    pieces = _split_rows(x, chunks)
+    for s in range(m):
+        src = (j - s) % m
+        nxt = ([lax.ppermute(p, axis, perm) for p in pieces]
+               if s < m - 1 else None)
+        for ci, p in enumerate(pieces):
+            dy_blk = lax.dynamic_slice_in_dim(
+                dy, src * t_loc + ci * piece, piece, axis=-2)
+            dw = dw + jnp.einsum("btd,btf->df", _flat2(p),
+                                 _flat2(dy_blk)).astype(w.dtype)
+        pieces = nxt
+    return dx.astype(x.dtype), dw
+
+
+_ag_mm.defvjp(_ag_mm_fwd, _ag_mm_bwd)
+
+
+def all_gather_matmul(x, w, *, axis: str, axis_size: int, chunks: int = 1):
+    """``all_gather(x, axis) @ w`` as an overlap-scheduled ppermute ring.
+
+    Runs inside a shard_map.  ``x``: (..., T/m, d) sequence-sharded over
+    ``axis``; ``w``: (d, F/m) this shard's column slice.  Returns
+    (..., T, F/m).  Forward and backward are chunked rings (no monolithic
+    all-gather / all-reduce in either direction).
+    """
+    if axis_size <= 1:
+        return x @ w
+    if x.shape[-2] % chunks:
+        raise ValueError(f"chunks={chunks} must divide the local row count "
+                         f"{x.shape[-2]}")
+    return _ag_mm(axis, axis_size, chunks, x, w)
+
+
+# ---------------------------------------------------------------------------
+# reduce_scatter(h @ W)  as a chunked ppermute reduce ring
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _mm_rs_vjp(axis, axis_size, chunks, h, w):
+    return _mm_rs(axis, axis_size, chunks, h, w)
+
+
+def _mm_rs(axis, axis_size, chunks, h, w):
+    m = axis_size
+    j = lax.axis_index(axis)
+    t = h.shape[-2]
+    t_loc = t // m
+    piece = t_loc // chunks
+    perm = _ring_perm(m)
+
+    def partial_piece(c, ci):
+        blk = lax.dynamic_slice_in_dim(h, c * t_loc + ci * piece, piece,
+                                       axis=-2)
+        return blk @ w
+
+    # chunk (j-1-s) mod m's accumulator arrives at device j at ring step s
+    accs = [partial_piece((j - 1) % m, ci) for ci in range(chunks)]
+    for s in range(m - 1):
+        accs = [lax.ppermute(a, axis, perm) for a in accs]
+        c = (j - 2 - s) % m
+        accs = [a + partial_piece(c, ci) for ci, a in enumerate(accs)]
+    return jnp.concatenate(accs, axis=-2) if chunks > 1 else accs[0]
+
+
+def _mm_rs_fwd(axis, axis_size, chunks, h, w):
+    return _mm_rs(axis, axis_size, chunks, h, w), (h, w)
+
+
+def _mm_rs_bwd(axis, axis_size, chunks, res, dy):
+    # one gather ring of the (seq-sharded) output cotangent produces both
+    # dh = all_gather(dy) @ W^T and dW = h^T @ all_gather(dy)
+    h, w = res
+    m = axis_size
+    j = lax.axis_index(axis)
+    t_loc = dy.shape[-2]
+    piece = t_loc // chunks
+    wt = w.swapaxes(-1, -2)
+    dh = jnp.zeros(h.shape, jnp.result_type(dy.dtype, w.dtype))
+    dw = jnp.zeros(w.shape, w.dtype)
+    perm = _ring_perm(m)
+    pieces = _split_rows(dy, chunks)
+    for s in range(m):
+        src = (j - s) % m
+        nxt = ([lax.ppermute(p, axis, perm) for p in pieces]
+               if s < m - 1 else None)
+        for ci, p in enumerate(pieces):
+            start = src * t_loc + ci * piece
+            dh = lax.dynamic_update_slice_in_dim(dh, p @ wt, start, axis=-2)
+            h_blk = lax.dynamic_slice_in_dim(h, start, piece, axis=-2)
+            dw = dw + jnp.einsum("btf,btd->fd", _flat2(h_blk),
+                                 _flat2(p)).astype(w.dtype)
+        pieces = nxt
+    return dh.astype(h.dtype), dw
+
+
+_mm_rs_vjp.defvjp(_mm_rs_fwd, _mm_rs_bwd)
+
+
+def matmul_reduce_scatter(h, w, *, axis: str, axis_size: int, chunks: int = 1):
+    """``reduce_scatter(h @ w, axis)`` as an overlap-scheduled reduce ring.
+
+    Runs inside a shard_map.  ``h``: (..., T, F/m) this shard's column slice
+    of the activations; ``w``: (F/m, d) this shard's row slice.  Returns
+    (..., T/m, d): this shard's sequence rows of ``sum_j h_j @ w_j``.  Each
+    partial matmul is computed while the previous accumulator hop is in
+    flight; the backward is a single gather ring.
+    """
+    if axis_size <= 1:
+        return h @ w
+    t_loc = h.shape[-2] // axis_size
+    if h.shape[-2] % axis_size:
+        raise ValueError(f"rows {h.shape[-2]} not divisible by "
+                         f"axis_size {axis_size}")
+    if t_loc % chunks:
+        raise ValueError(f"chunks={chunks} must divide the per-shard row "
+                         f"count {t_loc}")
+    return _mm_rs_vjp(axis, axis_size, chunks, h, w)
+
+
+# ---------------------------------------------------------------------------
+# bucketed DP gradient sync (ZeRO-style reduce-scatter + all-gather)
+# ---------------------------------------------------------------------------
+
+def grad_bucket_sizes(grads, bucket_bytes: float = DEFAULT_BUCKET_BYTES):
+    """Bucket assignment (list of per-bucket leaf counts) for a grad pytree:
+    leaves in REVERSE flatten order (the order the backward retires them),
+    greedily packed into buckets of at most ``bucket_bytes`` (every bucket
+    holds at least one leaf, so oversized leaves get a bucket of their own).
+    """
+    leaves = jax.tree.leaves(grads)
+    sizes = [leaf.size * leaf.dtype.itemsize for leaf in reversed(leaves)]
+    buckets, cur, cur_bytes = [], 0, 0
+    for s in sizes:
+        if cur and cur_bytes + s > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = 0, 0
+        cur += 1
+        cur_bytes += s
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def bucketed_grad_sync(grads, *, dp_axis: str, dp_size: int,
+                       pod_axis: Optional[str] = None,
+                       bucket_bytes: float = DEFAULT_BUCKET_BYTES):
+    """Sum per-device partial gradients across the DP axes, bucket by bucket.
+
+    Runs inside a shard_map.  Each bucket (reverse-traversal-ordered leaves,
+    ``grad_bucket_sizes``) is flattened into one f32 buffer and synced as
+
+        psum_scatter(dp_axis)  ->  [psum(pod_axis)]  ->  all_gather(dp_axis)
+
+    — the ZeRO split of the monolithic all-reduce, hierarchical across pods.
+    Issuing one pair per bucket is what lets the scheduler overlap bucket
+    k's wire time with the backward compute still producing bucket k+1
+    (a single fused all-reduce serializes behind the full backward).
+    Returns the fully-summed gradient pytree (identical on every DP rank).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    rev = list(reversed(leaves))
+    out_rev = []
+    i = 0
+    for count in grad_bucket_sizes(grads, bucket_bytes):
+        group = rev[i:i + count]
+        i += count
+        flat = jnp.concatenate([g.astype(jnp.float32).ravel() for g in group])
+        pad = (-flat.size) % dp_size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        shard = lax.psum_scatter(flat, dp_axis, scatter_dimension=0,
+                                 tiled=True)
+        if pod_axis is not None:
+            shard = lax.psum(shard, pod_axis)
+        full = lax.all_gather(shard, dp_axis, axis=0, tiled=True)
+        off = 0
+        for g in group:
+            out_rev.append(full[off:off + g.size].reshape(g.shape)
+                           .astype(g.dtype))
+            off += g.size
+    return jax.tree.unflatten(treedef, list(reversed(out_rev)))

@@ -35,14 +35,29 @@ class ParallelPlan:
     # synthesize the backward (GPipe-like K-micro residency regardless of
     # schedule; kept for bit-for-bit differential testing).
     runtime: str = "scheduled"
+    # Which collective runtime carries the tensor-MP matmuls and the DP
+    # gradient sync: "gspmd" leaves both to the partitioner (monolithic
+    # all-reduces, the escape hatch); "overlapped" routes the Megatron
+    # row/column matmuls through parallel.collectives' chunked ppermute
+    # rings and the DP grad exchange through the bucketed
+    # reduce-scatter/all-gather sync.
+    comm_runtime: str = "gspmd"
+    comm_chunks: int = 1          # ring chunks per shard for "overlapped"
     remat: bool = True
 
     PIPE_RUNTIMES = ("scheduled", "ad")
+    COMM_RUNTIMES = ("gspmd", "overlapped")
 
     def __post_init__(self):
         if self.runtime not in self.PIPE_RUNTIMES:
             raise ValueError(f"unknown pipeline runtime {self.runtime!r}; "
                              f"expected one of {self.PIPE_RUNTIMES}")
+        if self.comm_runtime not in self.COMM_RUNTIMES:
+            raise ValueError(f"unknown comm runtime {self.comm_runtime!r}; "
+                             f"expected one of {self.COMM_RUNTIMES}")
+        if self.comm_chunks < 1:
+            raise ValueError(f"comm_chunks must be >= 1, "
+                             f"got {self.comm_chunks}")
 
     @property
     def is_pipeline(self) -> bool:
@@ -58,7 +73,11 @@ class ParallelPlan:
         if self.is_pipeline:
             v = f" v={self.virtual_stages}" if self.virtual_stages > 1 else ""
             sched = f" [{self.schedule}{v}, {self.runtime} runtime]"
-        return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP{sched}"
+        comm = ""
+        if self.comm_runtime != "gspmd":
+            c = f" c={self.comm_chunks}" if self.comm_chunks > 1 else ""
+            comm = f" [{self.comm_runtime} comm{c}]"
+        return (f"{dp}-way DP x {mp}-way {self.mp_kind} MP{sched}{comm}"
                 f"{' +fsdp' if self.fsdp_axes else ''}"
                 f"{f' x{self.microbatches} {unit}' if self.microbatches > 1 else ''}")
 

@@ -17,6 +17,7 @@ micro-batch dim shards over the DP axes.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -49,15 +50,36 @@ class ShardingRules:
         self.fs = plan.fsdp_axes or None
         self.fsz = _axis_size(mesh, self.fs) if self.fs else 1
         self.batch_axes = tuple(plan.dp_axes)
+        self._path: Tuple[str, ...] = ()
+        self._warned = set()
 
     # -- helpers ----------------------------------------------------------
     def _m(self, dim: int, head_groups: Optional[int] = None):
-        """model axis if divisible (and head-aligned when head_groups given)."""
-        if not self.ms or self.msz == 1 or dim % self.msz:
+        """model axis if divisible (and head-aligned when head_groups given).
+
+        A rule that *wanted* the model axis but cannot divide falls back to
+        replication — silently amplifying per-device memory and compute by
+        the whole axis size (e.g. smollm's 15 heads on a 16-way axis), so the
+        fallback warns once per rule, naming the param path and dim."""
+        if not self.ms or self.msz == 1:
             return None
-        if head_groups is not None and head_groups % self.msz:
-            return None
-        return self.ms
+        blocked = None
+        if dim % self.msz:
+            blocked = f"dim {dim}"
+        elif head_groups is not None and head_groups % self.msz:
+            blocked = f"head groups {head_groups} (dim {dim})"
+        if blocked is None:
+            return self.ms
+        key = (".".join(self._path), dim, head_groups)
+        if key not in self._warned:
+            self._warned.add(key)
+            warnings.warn(
+                f"[sharding] {'.'.join(self._path) or '<input>'}: {blocked} "
+                f"not divisible by the {self.msz}-way model axis "
+                f"{self.ms!r}; replicating this param across tensor-MP "
+                f"(per-device memory/compute x{self.msz} for it)",
+                stacklevel=3)
+        return None
 
     def _f(self, dim: int):
         if not self.fs or self.fsz == 1 or dim % self.fsz:
@@ -82,6 +104,7 @@ class ShardingRules:
         cfg = self.cfg
         names = [p for p in path]
         name = names[-1]
+        self._path = tuple(str(p) for p in path)
         stacked = "layers" in names  # leading L dim from scan-stacking
         if self.plan.is_pipeline:
             return self._pipeline_spec(stacked, shape)
@@ -251,6 +274,7 @@ class ShardingRules:
         def spec(path, leaf):
             name = path[-1] if path else ""
             sh = leaf.shape
+            self._path = tuple(str(p) for p in path)
             if name == "pos":
                 return P()
             b_ok = len(sh) > 1 and sh[1] % bsz == 0 and bsz > 1

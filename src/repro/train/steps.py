@@ -50,12 +50,15 @@ def _make_pctx(mesh, plan: ParallelPlan, batch_shardable: bool,
     # Training keeps batch-sharded dispatch (tokens >> weights per step).
     ff_axes = tuple(plan.dp_axes) if (decode or not batch_shardable) else ()
     return ParallelCtx(mesh=mesh, batch_axes=axes if axes else (None,),
-                       model_axis=plan.model_axis, moe_ff_axes=ff_axes)
+                       model_axis=plan.model_axis, moe_ff_axes=ff_axes,
+                       comm_runtime=plan.comm_runtime,
+                       comm_chunks=plan.comm_chunks)
 
 
 def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
                     plan: ParallelPlan = ParallelPlan(), clip_norm: float = 1.0,
-                    pctx: Optional[ParallelCtx] = None):
+                    pctx: Optional[ParallelCtx] = None,
+                    bucket_bytes: Optional[float] = None):
     """Returns ``train_step(state, batch) -> (state, metrics)`` (pure fn).
 
     ``mp_kind="pipeline"`` plans route the forward/backward through the
@@ -112,8 +115,7 @@ def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
                 loss_fn, has_aux=True)(params, batch)
             return loss, metrics, grads
 
-    def train_step(state: TrainState, batch):
-        params = state.params
+    def total_grads(params, batch):
         if micro > 1:
             # delayed gradient update (paper §4.2): split the per-step batch
             # into `micro` micro-batches, accumulate grads, update once
@@ -134,9 +136,64 @@ def make_train_step(api: ModelApi, optimizer: Optimizer, *, mesh=None,
                 body, zeros, mbatch)
             grads = jax.tree.map(lambda g: g / micro, grads)
             loss = losses.mean()
-            metrics = {"loss": loss}
-        else:
-            loss, metrics, grads = grads_of(params, batch)
+            return loss, {"loss": loss}, grads
+        return grads_of(params, batch)
+
+    # Bucketed DP gradient sync (comm_runtime="overlapped", pure-DP plans):
+    # run the whole fwd+bwd(+accumulation) per-shard inside a shard_map and
+    # sync gradients bucket-by-bucket through the ZeRO-style reduce-scatter
+    # + all-gather split instead of GSPMD's single fused all-reduce — per
+    # bucket collectives are what the scheduler can overlap with the
+    # backward compute still producing later buckets.  Tensor/pipeline-MP
+    # and fsdp plans keep GSPMD's sync (their params are not replicated
+    # over DP, so the replicated-params shard_map does not apply).
+    dp_axes_live = tuple(a for a in plan.dp_axes
+                         if mesh is not None and mesh.shape.get(a, 1) > 1)
+    dp_degree = 1
+    for a in dp_axes_live:
+        dp_degree *= mesh.shape[a]
+    bucketed_dp = (plan.comm_runtime == "overlapped" and not pipelined
+                   and mesh is not None and not plan.fsdp_axes
+                   and dp_degree > 1
+                   and (plan.model_axis is None
+                        or mesh.shape.get(plan.model_axis, 1) == 1))
+    if bucketed_dp:
+        from repro.parallel.collectives import (DEFAULT_BUCKET_BYTES,
+                                                bucketed_grad_sync)
+
+        gspmd_total_grads = total_grads
+        dp_axis = dp_axes_live[-1]
+        pod_axis = dp_axes_live[0] if len(dp_axes_live) > 1 else None
+        bkt = DEFAULT_BUCKET_BYTES if bucket_bytes is None else bucket_bytes
+
+        def total_grads(params, batch):
+            # per-shard batch must split over DP and still divide into the
+            # accumulation micro-batches; otherwise keep GSPMD's fused sync
+            b = jax.tree.leaves(batch)[0].shape[0]
+            if b % dp_degree or (micro > 1 and (b // dp_degree) % micro):
+                return gspmd_total_grads(params, batch)
+
+            def local(p, bt):
+                loss, metrics, grads = gspmd_total_grads(p, bt)
+                grads = bucketed_grad_sync(grads, dp_axis=dp_axis,
+                                           dp_size=mesh.shape[dp_axis],
+                                           pod_axis=pod_axis,
+                                           bucket_bytes=bkt)
+                grads = jax.tree.map(
+                    lambda g: (g / dp_degree).astype(g.dtype), grads)
+                loss = jax.lax.pmean(loss, dp_axes_live)
+                metrics = {k: jax.lax.pmean(v, dp_axes_live)
+                           for k, v in metrics.items()}
+                return loss, metrics, grads
+
+            from repro.parallel.jaxcompat import shard_map
+            return shard_map(local, mesh=mesh,
+                             in_specs=(P(), P(dp_axes_live)),
+                             out_specs=(P(), P(), P()))(params, batch)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        loss, metrics, grads = total_grads(params, batch)
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
             metrics = dict(metrics, grad_norm=gnorm)

@@ -8,7 +8,8 @@ import pytest
 from repro.core.analytical import (TrainingRun, best_strategy,
                                    crossover_device_count, hybrid_wins,
                                    speedup_dp, speedup_hybrid)
-from repro.core.comm import (HardwareModel, hierarchical_all_reduce_time,
+from repro.core.comm import (HardwareModel, bucketed_all_reduce_time,
+                             hierarchical_all_reduce_time,
                              ring_all_reduce_time, scaling_efficiency)
 from repro.core.dlplacer import (DFG, HardwareGraph, OpCost, list_schedule,
                                  simulated_silicon, solve_placement)
@@ -137,6 +138,90 @@ def test_scaling_efficiency_bounds():
         se = scaling_efficiency(1e9, 0.1, n, hw)
         assert 0 < se <= 1.0
     assert scaling_efficiency(1e9, 0.1, 256, hw, assume_perfect=True) == 1.0
+
+
+def test_hierarchical_equals_ring_within_pod():
+    """n <= intra-pod degree must be exactly the single ICI ring."""
+    hw = HardwareModel()
+    for n in (2, 64, 256):
+        assert hierarchical_all_reduce_time(1e9, n, hw, 256) == pytest.approx(
+            ring_all_reduce_time(1e9, n, hw.ici_bw, hw.ici_latency))
+
+
+def test_hierarchical_composes_intra_plus_inter():
+    """Past the pod boundary: full-size ICI ring intra-pod plus a DCI ring
+    over pods carrying the 1/degree reduce-scattered shard."""
+    hw = HardwareModel()
+    n, degree = 1024, 256
+    got = hierarchical_all_reduce_time(1e9, n, hw, degree)
+    t_intra = ring_all_reduce_time(1e9, degree, hw.ici_bw, hw.ici_latency)
+    t_inter = ring_all_reduce_time(1e9 / degree, n // degree, hw.dci_bw,
+                                   hw.dci_latency)
+    assert got == pytest.approx(t_intra + t_inter)
+
+
+def test_bucketed_all_reduce_alpha_cost():
+    """Same wire time as the fused ring, plus 2*(n-1) hop latencies per
+    bucket — monotone in the bucket count, so tiny buckets are penalized."""
+    bw, lat, n, b = 100e9, 1e-6, 8, 1e9
+    fused = ring_all_reduce_time(b, n, bw, lat)
+    one = bucketed_all_reduce_time(b, n, bw, lat, bucket_bytes=b)
+    assert one == pytest.approx(2 * (n - 1) / n * b / bw + 2 * (n - 1) * lat)
+    assert one >= fused
+    ts = [bucketed_all_reduce_time(b, n, bw, lat, bucket_bytes=b / k)
+          for k in (1, 4, 16, 64)]
+    assert all(t2 > t1 for t1, t2 in zip(ts, ts[1:]))
+    assert bucketed_all_reduce_time(b, 1, bw, lat, bucket_bytes=b) == 0.0
+
+
+def test_scaling_efficiency_overlap_and_buckets():
+    """Overlap raises SE; the bucketed alpha cost lowers it (slightly)."""
+    hw = HardwareModel()
+    base = scaling_efficiency(1e9, 0.1, 256, hw)
+    over = scaling_efficiency(1e9, 0.1, 256, hw, overlap=0.6)
+    assert over > base
+    bucketed = scaling_efficiency(1e9, 0.1, 256, hw, bucket_bytes=1e6)
+    assert bucketed <= base
+
+
+# ---- planner pods interaction ----------------------------------------------
+
+def _planner_for(arch="biglstm"):
+    from repro.configs import get_config
+    from repro.core.planner import HybridPlanner, default_epoch_model
+    cfg = get_config(arch)
+    return HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+
+
+def test_planner_pods_factorization():
+    """_pods splits the budget at chips_per_pod (256) boundaries only when
+    the pod count divides both the budget and the DP degree."""
+    p = _planner_for()
+    assert p._pods(512, 256) == 2
+    assert p._pods(512, 16) == 2
+    assert p._pods(1024, 128) == 4
+    assert p._pods(256, 256) == 1          # single pod
+    assert p._pods(300, 300) == 1          # not a pod multiple
+    assert p._pods(1024, 255) == 1         # pods would not divide n
+
+
+def test_planner_multi_pod_choices_cross_pod_se():
+    """At 1024 devices the emitted multi-pod plans must carry the pod axis
+    in dp_axes / mesh_shape, n_workers must recompose pods*dp, and SE_N must
+    pay the hierarchical DCI cliff relative to an intra-pod point of the
+    same per-pod DP degree."""
+    p = _planner_for()
+    multi = [c for c in p.choices(1024) if c.pods > 1]
+    assert multi, "no multi-pod choices at 1024 devices"
+    for c in multi:
+        assert c.plan.dp_axes == ("pod", "data")
+        assert c.mesh_shape[0] == c.pods
+        assert c.n_workers == c.pods * c.dp
+        assert c.n_workers * c.mp <= 1024
+    # SE cliff: crossing pods with the same total N is worse than intra-pod
+    se_intra = p._se(256, 1)
+    se_cross = p._se(512, 1)
+    assert se_cross < se_intra
 
 
 # ---- epoch model -----------------------------------------------------------

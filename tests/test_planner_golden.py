@@ -25,16 +25,37 @@ from repro.core.planner import (HybridPlanner, default_epoch_model,
 from repro.parallel.pipeline import SCHEDULE_KINDS
 
 # (arch, devices) -> (mp_kind, pods, dp, mp, microbatches, schedule, speedup)
+# History: ISSUE 5's latency (alpha) term in the tensor-MP all-reduce model
+# nudged the inception SU pins down slightly (the RNN archs' pipeline SU and
+# their SE_N ring model already carried alpha).
 GOLDEN = {
     ("inception_v3", 64): ("none", 1, 64, 1, 1, "-", 1.420695),
-    ("inception_v3", 256): ("tensor", 1, 8, 32, 1, "-", 0.774818),
-    ("inception_v3", 1024): ("tensor", 4, 8, 32, 1, "-", 0.435361),
+    ("inception_v3", 256): ("tensor", 1, 8, 32, 1, "-", 0.765736),
+    ("inception_v3", 1024): ("tensor", 4, 8, 32, 1, "-", 0.430258),
     ("gnmt", 64): ("pipeline", 1, 16, 4, 16, "1f1b", 17.395472),
     ("gnmt", 256): ("pipeline", 1, 64, 4, 16, "1f1b", 6.316095),
     ("gnmt", 1024): ("pipeline", 4, 64, 4, 16, "1f1b", 1.624438),
     ("biglstm", 64): ("pipeline", 1, 32, 2, 16, "1f1b", 36.182307),
     ("biglstm", 256): ("pipeline", 1, 128, 2, 16, "1f1b", 20.842839),
     ("biglstm", 1024): ("pipeline", 4, 128, 2, 16, "1f1b", 5.672646),
+}
+
+# comm-runtime crossover pins (ISSUE 5): for an arch the overlapped runtime
+# actually executes (llama: homogeneous dense decoder), hiding
+# MEASURED_OVERLAP of the Megatron all-reduce time lifts tensor-MP SU^M and
+# pulls the hybrid-vs-DP tipping point (Eq. 6) earlier (m=4: 16 -> 8
+# devices).  Inception's CNN family has NO overlapped tensor-MP path, so
+# requesting the runtime must change nothing — the planner only credits
+# speedups the executor can deliver (comm_runtime_supported).
+GOLDEN_CROSSOVER = {
+    ("llama3_2_1b", "gspmd", 2): 8,
+    ("llama3_2_1b", "overlapped", 2): 8,
+    ("llama3_2_1b", "gspmd", 4): 16,
+    ("llama3_2_1b", "overlapped", 4): 8,
+    ("inception_v3", "gspmd", 2): None,
+    ("inception_v3", "overlapped", 2): None,
+    ("inception_v3", "gspmd", 4): None,
+    ("inception_v3", "overlapped", 4): None,
 }
 
 
@@ -53,6 +74,38 @@ def test_planner_golden_choices(arch):
             f"change is intentional, update GOLDEN")
         assert best.speedup == pytest.approx(speedup, rel=1e-3), (
             f"{arch}@{devices}: projected SU moved")
+
+
+def test_comm_runtime_shifts_crossover_golden():
+    """ISSUE 5 pin: selecting ``comm_runtime="overlapped"`` must shift the
+    DP-vs-hybrid crossover device count for an arch the overlapped runtime
+    executes (llama), must change NOTHING for an arch it cannot (inception's
+    CNN blocks fall back to GSPMD — the planner never credits a speedup the
+    executor cannot deliver), and the emitted plans must be stamped with the
+    runtime that was costed."""
+    for (arch, rt, m), want in GOLDEN_CROSSOVER.items():
+        cfg = get_config(arch)
+        planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                                comm_runtime=rt)
+        got = planner.crossover(m)
+        assert got == want, (
+            f"{arch} crossover(m={m}) under {rt} now {got}, golden {want} — "
+            f"update GOLDEN_CROSSOVER with the cost-model change")
+    cfg = get_config("llama3_2_1b")
+    over = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                         comm_runtime="overlapped")
+    base = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg))
+    assert over.best(256).speedup > base.best(256).speedup
+    assert over.best(256).plan.comm_runtime == "overlapped"
+    assert base.best(256).plan.comm_runtime == "gspmd"
+    # ineligible arch: identical choices, plans stamped with the gspmd
+    # runtime that will actually carry them
+    cnn = get_config("inception_v3")
+    cnn_over = HybridPlanner(cnn, epoch_model=default_epoch_model(cnn),
+                             comm_runtime="overlapped")
+    cnn_base = HybridPlanner(cnn, epoch_model=default_epoch_model(cnn))
+    assert cnn_over.best(256).speedup == cnn_base.best(256).speedup
+    assert cnn_over.best(256).plan.comm_runtime == "gspmd"
 
 
 def test_paper_rnn_archs_pipeline_at_scale():
