@@ -1,0 +1,167 @@
+"""Serving sweep: continuous-batching engine under a Poisson request trace.
+
+    PYTHONPATH=src python -m benchmarks.serving_sweep [--smoke]
+
+Emits ``BENCH_serving.json`` with two sections:
+
+- **poisson_trace** — the ``serve.continuous.ContinuousEngine`` (slotted KV
+  cache, chunked prefill interleaved with decode ticks) driven by a seeded
+  Poisson arrival process over a reduced llama: requests are submitted as
+  their arrival times pass, the scheduler ``step()`` loop runs open-loop,
+  and each request's submit-to-finish latency is recorded.  Reported:
+  sustained generated tokens/s over the busy interval, request-latency
+  p50/p99, mean queue wait (arrival -> first prefill opportunity proxy),
+  and slot occupancy.  CPU wall-clock numbers calibrate the *scheduler*
+  (admission, chunking, eviction), not the accelerator — the decode-step
+  latency model for real hardware is ``core.planner.decode_step_time``.
+
+- **planner_slo** — ``HybridPlanner.best_inference``: the latency-SLO-
+  constrained (DP replicas x TP, slots) search over a device budget on the
+  modeled hardware, for a few SLO points (the serving analogue of the
+  training crossover section in BENCH_collectives.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+FULL = dict(n_requests=24, n_slots=4, max_new=16, prompt_lo=8, prompt_hi=32,
+            prefill_chunk=8, mean_interarrival_s=0.05)
+SMOKE = dict(n_requests=6, n_slots=2, max_new=8, prompt_lo=4, prompt_hi=12,
+             prefill_chunk=4, mean_interarrival_s=0.02)
+
+
+def _percentile(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return None
+    i = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[i]
+
+
+def _poisson_trace(cfgv, seed=0):
+    import numpy as np
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.continuous import ContinuousEngine, Request
+
+    rng = np.random.default_rng(seed)
+    n = cfgv["n_requests"]
+    arrivals = np.cumsum(rng.exponential(cfgv["mean_interarrival_s"], n))
+    prompts = [rng.integers(1, 900, size=int(rng.integers(
+        cfgv["prompt_lo"], cfgv["prompt_hi"] + 1))).tolist()
+        for _ in range(n)]
+
+    cfg = get_config("llama3_2_1b").reduced()
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.PRNGKey(0))
+    capacity = cfgv["prompt_hi"] + cfgv["max_new"] + 8
+    engine = ContinuousEngine(api, params, n_slots=cfgv["n_slots"],
+                              capacity=capacity,
+                              prefill_chunk=cfgv["prefill_chunk"])
+    # warm the jitted tick/chunk paths outside the measured interval
+    warm = ContinuousEngine(api, params, n_slots=cfgv["n_slots"],
+                            capacity=capacity,
+                            prefill_chunk=cfgv["prefill_chunk"])
+    warm.run([Request(rid=0, tokens=prompts[0], max_new_tokens=2)])
+
+    submit_t, finish_t = {}, {}
+    occupancy = []
+    t0 = time.perf_counter()
+    nxt = 0
+    n_done = 0
+    while n_done < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            engine.submit(Request(rid=nxt, tokens=prompts[nxt],
+                                  max_new_tokens=cfgv["max_new"]))
+            submit_t[nxt] = now
+            nxt += 1
+        if not engine.active and not engine.queue:
+            if nxt < n:           # idle: fast-forward to the next arrival
+                time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+            continue
+        engine.step()
+        occupancy.append(len(engine.active))
+        now = time.perf_counter() - t0
+        for r in engine.results[n_done:]:
+            finish_t[r.rid] = now
+            n_done += 1
+    results = sorted(engine.results, key=lambda r: r.rid)
+    lat = [finish_t[r.rid] - submit_t[r.rid] for r in results]
+    gen_tokens = sum(len(r.tokens) for r in results)
+    busy = max(finish_t.values()) - min(submit_t.values())
+    rec = {
+        "arch": cfg.name, "n_requests": n, "n_slots": cfgv["n_slots"],
+        "max_new": cfgv["max_new"], "prefill_chunk": cfgv["prefill_chunk"],
+        "mean_interarrival_s": cfgv["mean_interarrival_s"],
+        "generated_tokens": gen_tokens,
+        "tokens_per_s": gen_tokens / max(busy, 1e-9),
+        "latency_p50_s": _percentile(lat, 50),
+        "latency_p99_s": _percentile(lat, 99),
+        "latency_mean_s": sum(lat) / len(lat),
+        "mean_slot_occupancy": sum(occupancy) / max(len(occupancy), 1),
+        "steps": len(occupancy),
+    }
+    print(f"serving_sweep,trace,tok_s={rec['tokens_per_s']:.1f},"
+          f"p50_s={rec['latency_p50_s']:.3f},p99_s={rec['latency_p99_s']:.3f},"
+          f"occupancy={rec['mean_slot_occupancy']:.2f}", flush=True)
+    return rec
+
+
+def _planner_slo():
+    from repro.configs import get_config
+    from repro.core.planner import HybridPlanner, default_epoch_model
+
+    cfg = get_config("llama3_2_1b")
+    planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
+                            comm_runtime="overlapped")
+    out = {}
+    for devices, slo_ms in ((16, 20.0), (16, 5.0), (64, 10.0)):
+        c = planner.best_inference(devices, slo_ms=slo_ms, context=4096)
+        out[f"dev{devices}_slo{slo_ms:g}ms"] = {
+            "replicas": c.replicas, "tp": c.tp, "slots": c.slots,
+            "step_latency_ms": c.step_latency * 1e3,
+            "tokens_per_s": c.tokens_per_s,
+            "comm_runtime": c.plan.comm_runtime,
+        }
+        print(f"serving_sweep,planner,dev={devices},slo_ms={slo_ms:g},"
+              f"tp={c.tp},replicas={c.replicas},slots={c.slots},"
+              f"tok_s={c.tokens_per_s:.0f}", flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace / few requests for the CI smoke lane")
+    args = ap.parse_args(argv)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    cfgv = SMOKE if args.smoke else FULL
+    rec = {
+        "bench": "serving_sweep",
+        "smoke": bool(args.smoke),
+        "poisson_trace": _poisson_trace(cfgv),
+        "planner_slo": _planner_slo(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"serving_sweep,done,out={args.out},"
+          f"tok_s={rec['poisson_trace']['tokens_per_s']:.1f}")
+    return 0
+
+
+def run(out: str = "BENCH_serving.json") -> None:
+    """benchmarks.run entry."""
+    main(["--out", out])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,7 +54,7 @@ from repro.core.comm import (HardwareModel, hierarchical_all_reduce_time,
 from repro.core.stateff import EpochModel, fit_epoch_model
 from repro.parallel.pipeline import (pipeline_activation_residency,
                                      pipeline_step_speedup)
-from repro.parallel.plan import ParallelPlan
+from repro.parallel.plan import ParallelPlan, serve_plan
 
 # interleaved virtual chunks per device the planner searches (Megatron's v)
 INTERLEAVE_CHUNKS = 2
@@ -80,6 +80,60 @@ class PlannerChoice:
     @property
     def n_workers(self) -> int:
         return self.pods * self.dp
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceChoice:
+    """One point of the latency-SLO-constrained serving search: ``replicas``
+    independent decode groups of ``tp`` chips, each running a continuous-
+    batching engine with ``slots`` request lanes."""
+    replicas: int
+    tp: int
+    slots: int                     # concurrent requests per replica
+    step_latency: float            # modeled s/token for the full batch
+    tokens_per_s: float            # sustained: replicas * slots / step
+    mem_bytes: float               # per-chip weights + KV working set
+    mesh_shape: Tuple[int, ...]    # (replicas, tp) decode mesh per group
+    plan: ParallelPlan
+
+    @property
+    def n_devices(self) -> int:
+        return self.replicas * self.tp
+
+
+def kv_bytes(cfg: ModelConfig, slots: int, context: int) -> float:
+    """bf16 KV cache bytes for ``slots`` requests of ``context`` positions."""
+    return (2.0 * cfg.n_layers * slots * context
+            * cfg.n_kv_heads * cfg.head_dim * 2.0)
+
+
+def decode_step_time(cfg: ModelConfig, tp: int, hw: HardwareModel, *,
+                     slots: int, context: int,
+                     comm_runtime: str = "gspmd") -> float:
+    """Modeled latency of ONE decode tick (all ``slots`` advance a token) on
+    a ``tp``-way tensor-MP group.
+
+    Decode is bandwidth-bound: every tick streams this chip's 1/tp of the
+    bf16 weights plus its share of the KV cache from HBM; the matmul FLOPs
+    (2 * params * slots / tp) only bind at large batch.  On top rides the
+    Megatron exchange — 2 activation all-reduces per layer of the (slots, d)
+    residual — on the same ring model as training
+    (``core.comm.ring_all_reduce_time``), with ``MEASURED_OVERLAP`` of the
+    wire time hidden when the overlapped collective rings carry the step
+    (the per-hop alpha latency is what dominates at decode sizes, which is
+    exactly why the SLO search favors modest tp)."""
+    from repro.core.comm import MEASURED_OVERLAP, ring_all_reduce_time
+    p = float(cfg.n_active_params())
+    t_mem = (2.0 * p / tp + kv_bytes(cfg, slots, context) / tp) / hw.hbm_bw
+    t_flops = 2.0 * p * slots / (tp * hw.peak_flops * hw.mfu)
+    t_comm = 0.0
+    if tp > 1:
+        act_bytes = slots * cfg.d_model * 2.0
+        t_comm = (2.0 * cfg.n_layers
+                  * ring_all_reduce_time(act_bytes, tp, hw.ici_bw,
+                                         hw.ici_latency)
+                  * (1.0 - MEASURED_OVERLAP[comm_runtime]))
+    return max(t_mem, t_flops) + t_comm
 
 
 def mp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel,
@@ -437,6 +491,76 @@ class HybridPlanner:
     def crossover(self, m: int = 2, max_devices: int = 4096) -> Optional[int]:
         from repro.core.analytical import crossover_device_count
         return crossover_device_count(self.run, m, max_devices)
+
+    # ---- inference-plan search (latency-SLO-constrained) -------------------
+
+    def inference_choices(self, total_devices: int, *, slo_ms: float,
+                          context: Optional[int] = None,
+                          slot_candidates: Tuple[int, ...] = (
+                              1, 2, 4, 8, 16, 32, 64, 128, 256),
+                          comm_chunks: int = 1) -> List["InferenceChoice"]:
+        """All (DP replicas x TP, slots) serving layouts meeting the
+        per-token latency SLO, best sustained tokens/s first.
+
+        The device budget factors into ``replicas`` independent decode
+        groups of ``tp`` chips each (SplitBrain's hybrid worker layout);
+        for each feasible tp this grows the slot count while the modeled
+        decode-step latency stays under ``slo_ms`` and the weights + slot
+        KV fit in HBM — both are monotone in slots, so the largest feasible
+        count is the per-tp throughput argmax.  Tensor-MP is only searched
+        for archs with a tensor path (``tensor_mp_supported``), and the
+        ring-overlap credit only where the overlapped runtime actually
+        executes (``self.mp_comm_runtime`` — same gate as training)."""
+        context = self.seq_len if context is None else context
+        out: List[InferenceChoice] = []
+        tps = sorted({1, *self.mp_candidates})
+        for tp in tps:
+            if tp < 1 or total_devices % tp:
+                continue
+            if tp > 1 and not tensor_mp_supported(self.cfg):
+                continue
+            if tp > 1 and self.cfg.n_heads % tp:
+                continue
+            replicas = total_devices // tp
+            weight_bytes = 2.0 * self.cfg.n_params() / tp   # bf16 serving
+            if weight_bytes > self.hw.hbm_bytes:
+                continue
+            best = None
+            for slots in sorted(slot_candidates):
+                t_step = decode_step_time(
+                    self.cfg, tp, self.hw, slots=slots, context=context,
+                    comm_runtime=self.mp_comm_runtime if tp > 1 else "gspmd")
+                mem = weight_bytes + kv_bytes(self.cfg, slots, context) / tp
+                if t_step * 1e3 > slo_ms or mem > self.hw.hbm_bytes:
+                    break                       # both monotone in slots
+                best = (slots, t_step, mem)
+            if best is None:
+                continue
+            slots, t_step, mem = best
+            comm = self.mp_comm_runtime if tp > 1 else "gspmd"
+            out.append(InferenceChoice(
+                replicas=replicas, tp=tp, slots=slots,
+                step_latency=t_step,
+                tokens_per_s=replicas * slots / t_step,
+                mem_bytes=mem,
+                mesh_shape=(replicas if replicas > 1 else 1, tp),
+                plan=serve_plan(tp, comm_runtime=comm,
+                                comm_chunks=comm_chunks)))
+        return sorted(out, key=lambda c: (-c.tokens_per_s, c.tp))
+
+    def best_inference(self, total_devices: int, *, slo_ms: float,
+                       context: Optional[int] = None,
+                       **kw) -> "InferenceChoice":
+        cs = self.inference_choices(total_devices, slo_ms=slo_ms,
+                                    context=context, **kw)
+        if not cs:
+            raise ValueError(
+                f"{self.cfg.name}: no serving layout over {total_devices} "
+                f"devices meets a {slo_ms:g} ms/token SLO at context "
+                f"{context if context is not None else self.seq_len} "
+                f"({self.hw.hbm_bytes / 2**30:.0f} GiB/device) — raise the "
+                f"SLO, shrink the context, or add devices")
+        return cs[0]
 
 
 def default_epoch_model(cfg: ModelConfig, mini_batch: int = 16) -> EpochModel:

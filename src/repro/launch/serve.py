@@ -1,7 +1,16 @@
 """Serving launcher: load/initialize a model and decode batched requests.
 
+Static batch (the classic path)::
+
     python -m repro.launch.serve --arch llama3_2_1b --reduced \
         --batch 4 --prompt-len 32 --max-new 16
+
+Continuous batching over a slotted KV cache, optionally with the decode
+tick on a dp x tp mesh (forced host devices work for CPU smoke runs)::
+
+    python -m repro.launch.serve --arch llama3_2_1b --reduced \
+        --continuous --slots 4 --tp 2 --prefill-chunk 8 \
+        --batch 8 --prompt-len 32 --max-new 16
 """
 from __future__ import annotations
 
@@ -13,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.api import build_model
+from repro.serve.continuous import ContinuousEngine, Request
 from repro.serve.engine import ServeEngine
 
 
@@ -20,10 +30,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests (continuous) / batch rows (static)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="slotted continuous-batching engine")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="request slots (continuous engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="max prompt tokens per prefill step (0 = one shot)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-MP ways for the decode tick (needs >= tp "
+                    "devices; use XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N on CPU)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -32,10 +53,40 @@ def main():
     api = build_model(cfg, remat=False)
     key = jax.random.PRNGKey(0)
     params = api.init(key)
-    engine = ServeEngine(api, params, temperature=args.temperature)
 
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, dtype=jnp.int32)}
+    tokens = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, dtype=jnp.int32)
+
+    if args.continuous:
+        mesh = model_axis = None
+        if args.tp > 1:
+            from repro.parallel.jaxcompat import make_mesh
+            n_dev = len(jax.devices())
+            if n_dev % args.tp:
+                raise SystemExit(f"--tp {args.tp} does not divide the "
+                                 f"{n_dev} available devices")
+            mesh = make_mesh((n_dev // args.tp, args.tp), ("data", "model"))
+            model_axis = "model"
+        engine = ContinuousEngine(
+            api, params, n_slots=args.slots,
+            capacity=args.prompt_len + args.max_new + 8,
+            prefill_chunk=args.prefill_chunk, temperature=args.temperature,
+            mesh=mesh, model_axis=model_axis,
+            batch_axes=("data",) if mesh is not None else ())
+        reqs = [Request(rid=i, tokens=[int(t) for t in tokens[i]],
+                        max_new_tokens=args.max_new)
+                for i in range(args.batch)]
+        t0 = time.time()
+        results = engine.run(reqs)
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in results)
+        print(f"[serve] continuous: {toks} tokens in {dt:.2f}s "
+              f"({toks / dt:.1f} tok/s, slots={args.slots}, tp={args.tp})")
+        print("first sequence:", results[0].tokens)
+        return
+
+    engine = ServeEngine(api, params, temperature=args.temperature)
+    batch = {"tokens": tokens}
     if cfg.n_prefix_embeds:
         batch["prefix"] = jax.random.normal(
             key, (args.batch, min(cfg.n_prefix_embeds, 8), cfg.d_model)) * 0.02

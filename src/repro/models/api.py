@@ -129,6 +129,69 @@ def _random_like(key, spec):
 
 
 # ---------------------------------------------------------------------------
+# per-slot cache helpers (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+
+def make_slot_cache(cfg: ModelConfig, n_slots: int, capacity: int,
+                    dtype=None):
+    """A slotted KV cache for continuous batching: ``n_slots`` independent
+    request slots over a LINEAR cache of ``capacity`` positions each, with
+    per-slot write positions (``pos`` is (n_slots,), which is what routes
+    ``decode_step`` into slot mode).  A sliding-window arch still gets full
+    linear capacity — the window is enforced as an attention mask, so
+    mid-flight requests at different absolute positions can share a batch."""
+    if cfg.rwkv or cfg.family == "hybrid" or cfg.encoder_layers \
+            or cfg.n_prefix_embeds:
+        raise ValueError(
+            f"slotted KV serving supports homogeneous KV-cache decoders; "
+            f"{cfg.name} (family={cfg.family}) carries recurrent/cross-attn "
+            f"state that has no per-position slot layout")
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    cache = tf_mod.make_cache(cfg, n_slots, capacity, window=0, dtype=dtype)
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def cache_extract_slot(cache, slot):
+    """View one slot of a slotted cache as a batch-1 slot cache (``pos``
+    (1,)) — the shape ``decode_step``'s slot-extend path takes for chunked
+    prefill."""
+    out = {"pos": jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1)}
+    for k, v in cache.items():
+        if k != "pos":
+            out[k] = jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1)
+    return out
+
+
+def cache_insert_slot(cache, slot_cache, slot):
+    """Write a batch-1 cache (``cache_extract_slot`` shape) back into
+    ``slot`` of the slotted cache."""
+    out = {"pos": jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], slot_cache["pos"].reshape(1).astype(cache["pos"].dtype),
+        slot, axis=0)}
+    for k, v in cache.items():
+        if k != "pos":
+            out[k] = jax.lax.dynamic_update_slice_in_dim(
+                v, slot_cache[k], slot, axis=1)
+    return out
+
+
+def cache_evict_slot(cache, slot):
+    """Free a slot: zero its KV rows and reset its position so the slot can
+    be re-admitted.  (Zeroing is not strictly required — ``pos`` gates what
+    attention can see — but keeps evicted state from leaking into debug
+    dumps and makes reuse tests exact.)"""
+    out = {"pos": jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.zeros((1,), cache["pos"].dtype), slot, axis=0)}
+    for k, v in cache.items():
+        if k != "pos":
+            out[k] = jax.lax.dynamic_update_slice_in_dim(
+                v, jnp.zeros(v.shape[:1] + (1,) + v.shape[2:], v.dtype),
+                slot, axis=1)
+    return out
+
+
+# ---------------------------------------------------------------------------
 
 def _decode_window(cfg, shape: InputShape) -> int:
     """Effective attention window for a decode shape: long_500k forces the

@@ -159,17 +159,21 @@ def _chunked_attention(q, k, v, q_start, causal: bool, window: int, kv_chunk: in
 
 def attention(q, k, v, *, causal: bool = True, q_start=0, window: int = 0,
               softcap: float = 0.0, kv_chunk: int = 1024,
-              dense_threshold: int = 8192, kv_mask=None):
+              dense_threshold: int = 8192, kv_mask=None, mask=None):
     """GQA attention.  q: (B,Tq,Hq,hd); k,v: (B,Tk,Hkv,hd).
 
     ``window`` > 0 restricts key j to (i - window, i].  ``kv_mask`` is an
-    optional (B, Tk) bool of valid cache slots (decode).  Chooses a dense path
-    for short KV and the chunked online-softmax path (flash algorithm) for
-    long KV.
+    optional (B, Tk) bool of valid cache slots (decode).  ``mask`` is an
+    explicit (B, Tq, Tk) bool overriding all derived masking (per-request
+    positions in the slotted serving cache); it forces the dense path.
+    Otherwise chooses a dense path for short KV and the chunked
+    online-softmax path (flash algorithm) for long KV.
     """
     hq, hkv = q.shape[2], k.shape[2]
     k = repeat_kv(k, hq // hkv)
     v = repeat_kv(v, hq // hkv)
+    if mask is not None:
+        return _dense_attention(q, k, v, mask[:, None], softcap)
     tq, tk = q.shape[1], k.shape[1]
     if tk <= dense_threshold or softcap:
         qpos = q_start + jnp.arange(tq)
@@ -203,6 +207,18 @@ def cache_insert_full(cache, k_new, v_new, pos):
     k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
     return {"k": k, "v": v}
+
+
+def cache_insert_at(cache, k_new, v_new, pos):
+    """Write (B,t,KV,hd) at per-row positions ``pos`` (B,) — one
+    dynamic_update_slice per row (vmapped), the slotted-cache insert of the
+    continuous-batching engine.  Scalar ``pos`` falls through to
+    ``cache_insert_full``."""
+    if jnp.ndim(pos) == 0:
+        return cache_insert_full(cache, k_new, v_new, pos)
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0))
+    return {"k": upd(cache["k"], k_new, pos), "v": upd(cache["v"], v_new, pos)}
 
 
 def cache_insert_window(cache, k_new, v_new):

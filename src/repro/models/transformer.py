@@ -234,11 +234,37 @@ def _self_attention(p, x, cfg, *, window: int, pos0, cache_kv=None,
         if kv_spec is not None:
             k = jax.lax.with_sharding_constraint(k, kv_spec)
             v = jax.lax.with_sharding_constraint(v, kv_spec)
-    positions = pos0 + jnp.arange(t)
-    q = L.apply_rope(q, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
-    k = L.apply_rope(k, jnp.broadcast_to(positions, (b, t)), cfg.rope_theta)
+    if jnp.ndim(pos0):
+        positions = pos0[:, None] + jnp.arange(t)[None]          # (b, t)
+    else:
+        positions = jnp.broadcast_to(pos0 + jnp.arange(t), (b, t))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
     if cache_kv is None:
         out = L.attention(q, k, v, causal=True, q_start=0, window=window,
+                          softcap=cfg.attn_logit_softcap)
+    elif jnp.ndim(cache_len) == 1:
+        # slot mode (continuous batching): per-request positions against a
+        # LINEAR cache of full capacity — a sliding window is enforced by
+        # mask, not by ring storage, so mid-flight requests at different
+        # positions coexist in one batch.  Valid keys for query i of row r
+        # (absolute position pos_r + i): filled cache slots s < pos_r, plus
+        # appended chunk tokens j <= i (causal within the chunk — this is
+        # what makes multi-token chunked prefill against a cache correct).
+        k_all = jnp.concatenate([cache_kv["k"], k], axis=1)
+        v_all = jnp.concatenate([cache_kv["v"], v], axis=1)
+        clen = cache_kv["k"].shape[1]
+        slot = jnp.arange(clen + t)
+        in_cache = slot < clen                                   # (clen+t,)
+        qpos = positions                                         # (b, t)
+        kpos = jnp.where(in_cache[None], slot[None],
+                         pos0[:, None] + (slot[None] - clen))    # (b, clen+t)
+        valid = jnp.where(in_cache[None, None],
+                          slot[None, None, :] < pos0[:, None, None],
+                          kpos[:, None, :] <= qpos[:, :, None])
+        if window:
+            valid &= kpos[:, None, :] > qpos[:, :, None] - window
+        out = L.attention(q, k_all, v_all, mask=valid,
                           softcap=cfg.attn_logit_softcap)
     elif (pctx is not None and pctx.mesh is not None
           and pctx.model_axis is not None and t == 1
@@ -342,8 +368,13 @@ def block_apply(cfg, p, x, *, mode: str, window: int, pos0, cache=None,
         attn_out, (k_new, v_new) = _self_attention(
             p["attn"], h, cfg, window=window, pos0=pos0, cache_kv=cache_kv,
             cache_len=pos0, pctx=pctx)
-        seq_sharded = _cache_seq_sharded(cfg, cache_kv, pctx)
-        if window and not seq_sharded:
+        seq_sharded = (_cache_seq_sharded(cfg, cache_kv, pctx)
+                       and jnp.ndim(pos0) == 0)
+        if jnp.ndim(pos0):
+            # slot mode: always the per-row positional insert — the sliding
+            # window (if any) was already applied as a mask above
+            kv = L.cache_insert_at(cache_kv, k_new, v_new, pos0)
+        elif window and not seq_sharded:
             kv = L.cache_insert_window(cache_kv, k_new, v_new)
         elif seq_sharded:
             # windowed ring caches also take the positional-insert path when
@@ -737,8 +768,13 @@ def forward_pipeline(cfg, params, batch, *, mesh, axis: str, n_micro: int,
 
 def decode_step(cfg, params, cache, batch, *, window_override=None,
                 pctx: Optional[ParallelCtx] = None):
-    """One-token decode.  batch: dict(tokens (B,1) [, ...]).  Returns
-    (logits (B,1,V), new_cache)."""
+    """Decode against the cache.  batch: dict(tokens (B,t)).  Returns
+    (logits (B,t,V), new_cache).
+
+    ``cache["pos"]`` scalar: the classic static-batch one-token step (t=1).
+    ``cache["pos"]`` (B,): slot mode — per-request positions in a linear
+    capacity cache (continuous batching), where t >= 1 also serves as the
+    chunked-prefill "extend" step (causal within the appended chunk)."""
     window = cfg.sliding_window if window_override is None else window_override
     x = _embed(cfg, params, batch["tokens"])
     pos = cache["pos"]
@@ -753,5 +789,145 @@ def decode_step(cfg, params, cache, batch, *, window_override=None,
     x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches),
                                  unroll=cfg.n_layers if L.analysis_unroll() else 1)
     logits = _head(cfg, params, x)
+    new_caches["pos"] = pos + batch["tokens"].shape[1]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# tensor-MP slot decode (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+
+def decode_slots_tp_supported(cfg, mesh, model_axis, batch_axes,
+                              n_slots: int, chunks: int = 1) -> bool:
+    """Can the slot-ring decode step execute on this (arch, mesh, slots)?
+    Mirrors ``overlapped_supported`` with the SLOT dim in the role the
+    sequence dim plays in training: n_slots must divide over dp x mp x
+    chunks so the residual stream can stay slot-sharded between blocks."""
+    if mesh is None or model_axis is None:
+        return False
+    msz = mesh.shape[model_axis]
+    if msz <= 1 or not overlapped_arch_supported(cfg):
+        return False
+    dp = 1
+    for a in (batch_axes or ()):
+        if a:
+            dp *= mesh.shape[a]
+    return (cfg.n_heads > 0 and cfg.n_heads % msz == 0
+            and cfg.d_ff % msz == 0 and n_slots % (dp * msz) == 0
+            and (n_slots // (dp * msz)) % max(chunks, 1) == 0)
+
+
+def decode_slots_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
+                    batch_axes=(), comm_chunks: int = 1,
+                    window_override=None):
+    """One continuous-batching decode tick under a dp x tp mesh, the whole
+    layer stack inside ONE shard_map with every Megatron matmul on the
+    chunked collective-matmul rings (``parallel.collectives``).
+
+    Decode has one token per request, so the training trick of sharding the
+    sequence dim does not apply — instead the SLOT/batch dim is the ring row
+    dim: the residual stream stays slot-sharded (B/(dp*mp), d) between
+    blocks, ``all_gather_matmul`` reassembles all slots for each shard's
+    head slice of qkv, attention runs per-slot against the (KV-head-sharded
+    when divisible, else replicated) cache, ``matmul_reduce_scatter``
+    returns the slot shard through the row-parallel wo, and the MLP rides
+    the same rings.  One ``ring_all_gather`` before the (replicated) head is
+    the only full reassembly — no monolithic all-gather/all-reduce appears
+    in the compiled per-layer decode HLO.
+
+    batch: dict(tokens (B, 1)); cache: slot cache with per-request
+    ``pos`` (B,).  Returns (logits (B,1,V), new_cache)."""
+    from repro.parallel.collectives import (all_gather_matmul,
+                                            matmul_reduce_scatter,
+                                            ring_all_gather)
+    window = cfg.sliding_window if window_override is None else window_override
+    tokens = batch["tokens"]
+    pos = cache["pos"]
+    msz = mesh.shape[model_axis]
+    baxes = tuple(a for a in (batch_axes or ())
+                  if a and mesh.shape.get(a, 1) > 1)
+    bspec = baxes if baxes else None
+    chunks = max(comm_chunks, 1)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hpm = nh // msz
+    kv_sharded = nkv % msz == 0
+    kvpm = nkv // msz if kv_sharded else nkv
+    kw = dict(axis=model_axis, axis_size=msz, chunks=chunks)
+
+    def local(p, layer_caches, tok, ps):
+        # tok: (B_loc, 1) and ps: (B_loc,) per data shard, replicated over
+        # the model axis; the model shard takes its slot rows of the residual
+        b_loc = tok.shape[0]
+        rows = b_loc // msz
+        x = _embed(cfg, p, tok)[:, 0]                     # (B_loc, d)
+        j = jax.lax.axis_index(model_axis)
+        xl = jax.lax.dynamic_slice_in_dim(x, j * rows, rows, axis=0)
+        clen = layer_caches["k"].shape[2]
+        slot = jnp.arange(clen + 1)
+        valid = jnp.where(slot[None] < clen, slot[None] < ps[:, None], True)
+        if window:
+            kpos = jnp.where(slot[None] < clen, slot[None], ps[:, None])
+            valid &= kpos > ps[:, None] - window
+
+        def body(xl, lp_cache):
+            lp, csl = lp_cache
+            h = L.rms_norm(xl, lp["ln1"], cfg.norm_eps)
+            w_qkv = jnp.concatenate(
+                [lp["attn"]["wq"], lp["attn"]["wk"], lp["attn"]["wv"]],
+                axis=1).astype(xl.dtype)
+            qkv = all_gather_matmul(h, w_qkv, **kw)       # (B_loc, ...)
+            q = qkv[:, :hpm * hd].reshape(b_loc, 1, hpm, hd)
+            k = qkv[:, hpm * hd:(hpm + kvpm) * hd].reshape(b_loc, 1, kvpm, hd)
+            v = qkv[:, (hpm + kvpm) * hd:].reshape(b_loc, 1, kvpm, hd)
+            q = L.apply_rope(q, ps[:, None], cfg.rope_theta)
+            k = L.apply_rope(k, ps[:, None], cfg.rope_theta)
+            k_all = jnp.concatenate([csl["k"], k], axis=1)
+            v_all = jnp.concatenate([csl["v"], v], axis=1)
+            if kv_sharded:
+                k_att, v_att = k_all, v_all
+            else:
+                # replicated KV: q-head-aligned slice of the repeated heads
+                k_att = jax.lax.dynamic_slice_in_dim(
+                    L.repeat_kv(k_all, nh // nkv), j * hpm, hpm, axis=2)
+                v_att = jax.lax.dynamic_slice_in_dim(
+                    L.repeat_kv(v_all, nh // nkv), j * hpm, hpm, axis=2)
+            out = L.attention(q, k_att, v_att, mask=valid[:, None, :],
+                              softcap=cfg.attn_logit_softcap)
+            xl = xl + matmul_reduce_scatter(
+                out.reshape(b_loc, hpm * hd),
+                lp["attn"]["wo"].astype(xl.dtype), **kw)
+            h2 = L.rms_norm(xl, lp["ln2"], cfg.norm_eps)
+            xl = xl + L.mlp_apply_overlapped(lp["mlp"], h2, cfg.mlp_kind,
+                                             axis=model_axis, axis_size=msz,
+                                             chunks=chunks)
+            kv = L.cache_insert_at({"k": csl["k"], "v": csl["v"]}, k, v, ps)
+            return xl, kv
+
+        xl, new_caches = jax.lax.scan(
+            body, xl, (p["layers"], layer_caches),
+            unroll=cfg.n_layers if L.analysis_unroll() else 1)
+        x_full = ring_all_gather(xl, **kw)                # (B_loc, d)
+        logits = _head(cfg, p, x_full[:, None])
+        return logits, new_caches
+
+    col, row = P(None, None, model_axis), P(None, model_axis, None)
+    kvw = col if kv_sharded else P(None, None, None)
+    p_specs = {"embed": P(None, None), "final_norm": P(None),
+               "layers": {"ln1": P(None, None), "ln2": P(None, None),
+                          "attn": {"wq": col, "wk": kvw, "wv": kvw,
+                                   "wo": row},
+                          "mlp": {k: (row if k == "wo" else col)
+                                  for k in params["layers"]["mlp"]}}}
+    if "lm_head" in params:
+        p_specs["lm_head"] = P(None, None)
+    kvm = model_axis if kv_sharded else None
+    c_spec = P(None, bspec, None, kvm, None)
+    layer_caches = {"k": cache["k"], "v": cache["v"]}
+    logits, new_caches = shard_map(
+        local, mesh=mesh,
+        in_specs=(p_specs, {"k": c_spec, "v": c_spec},
+                  P(bspec, None), P(bspec)),
+        out_specs=(P(bspec, None, None), {"k": c_spec, "v": c_spec}))(
+            params, layer_caches, tokens, pos)
     new_caches["pos"] = pos + 1
     return logits, new_caches

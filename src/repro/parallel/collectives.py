@@ -179,6 +179,39 @@ def all_gather_matmul(x, w, *, axis: str, axis_size: int, chunks: int = 1):
     return _ag_mm(axis, axis_size, chunks, x, w)
 
 
+def ring_all_gather(x, *, axis: str, axis_size: int, chunks: int = 1):
+    """``all_gather(x, axis)`` over the row dim as a chunked ppermute ring.
+
+    The no-matmul sibling of ``all_gather_matmul`` for the one place decode
+    genuinely needs the full tensor reassembled (the residual stream before
+    the replicated LM head): same ring schedule, each hop's payload is
+    written straight into its output rows instead of being matmul'd.
+    ``x``: (..., T/m, d) row-sharded over ``axis``; returns (..., T, d).
+    Inference-path only (no custom_vjp).
+    """
+    if axis_size <= 1:
+        return x
+    if x.shape[-2] % chunks:
+        raise ValueError(f"chunks={chunks} must divide the local row count "
+                         f"{x.shape[-2]}")
+    m = axis_size
+    j = lax.axis_index(axis)
+    t_loc = x.shape[-2]
+    piece = t_loc // chunks
+    out = jnp.zeros(x.shape[:-2] + (t_loc * m, x.shape[-1]), x.dtype)
+    perm = _ring_perm(m)
+    pieces = _split_rows(x, chunks)
+    for s in range(m):
+        src = (j - s) % m
+        nxt = ([lax.ppermute(p, axis, perm) for p in pieces]
+               if s < m - 1 else None)                  # send before write
+        for ci, p in enumerate(pieces):
+            out = lax.dynamic_update_slice_in_dim(
+                out, p, src * t_loc + ci * piece, axis=-2)
+        pieces = nxt
+    return out
+
+
 # ---------------------------------------------------------------------------
 # reduce_scatter(h @ W)  as a chunked ppermute reduce ring
 # ---------------------------------------------------------------------------

@@ -91,6 +91,20 @@ def plan_degrees(plan: ParallelPlan, mesh) -> Tuple[int, int]:
     return n, m
 
 
+def serve_plan(tp: int, *, comm_runtime: str = "overlapped",
+               comm_chunks: int = 1) -> ParallelPlan:
+    """The decode-mesh plan for one serving replica: slots shard over
+    ``data``, the layer matmuls over a ``tp``-way ``model`` axis riding the
+    collective rings (tp == 1 degenerates to a single-device replica)."""
+    return ParallelPlan(
+        dp_axes=("data",),
+        model_axis="model" if tp > 1 else None,
+        mp_kind="tensor",
+        comm_runtime=comm_runtime if tp > 1 else "gspmd",
+        comm_chunks=comm_chunks,
+        remat=False)
+
+
 PAPER_BASELINE = ParallelPlan()                                  # DP x tensor-MP
 PAPER_DP_ONLY = ParallelPlan(model_axis=None)                    # pure DP
 OPTIMIZED = ParallelPlan(fsdp_axes=("data",))                    # + ZeRO-3

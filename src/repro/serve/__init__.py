@@ -1,3 +1,5 @@
+from repro.serve.continuous import ContinuousEngine, Request, RequestResult
 from repro.serve.engine import GenerationResult, ServeEngine
 
-__all__ = ["GenerationResult", "ServeEngine"]
+__all__ = ["ContinuousEngine", "GenerationResult", "Request",
+           "RequestResult", "ServeEngine"]

@@ -1,0 +1,228 @@
+"""Continuous-batching serving engine over a slotted KV cache.
+
+Slot/admission model
+====================
+
+The engine owns ONE slotted cache (``models.api.make_slot_cache``):
+``n_slots`` independent request lanes, each a linear KV region of
+``capacity`` positions with its own write position (``cache["pos"]`` is
+(n_slots,)).  Requests flow through three states:
+
+    queued --admit--> prefilling --last chunk--> decoding --eos/budget--> done
+                       (slot held)                (slot held)            (slot freed)
+
+Per ``step()`` the engine (1) **admits** queued requests into free slots,
+(2) runs ONE prefill chunk for the head-of-line prefilling request —
+chunked prefill is what keeps a long prompt from stalling the running
+batch: decode ticks interleave between its chunks, (3) runs ONE decode
+tick over ALL slots with an active-row mask, (4) **evicts** finished
+requests (EOS or token budget) and frees their slots for the next
+admission.  Everything the device sees is fixed-shape — admission and
+eviction only edit slot rows and the mask, so joining requests never
+retrace the jitted tick and (pinned by test) never perturb the tokens of
+requests already in flight.
+
+The decode tick comes from ``train.steps.make_continuous_steps``: under a
+dp x tp mesh it executes ``transformer.decode_slots_tp`` — the whole layer
+stack inside one shard_map with every Megatron matmul on the chunked
+collective-matmul ppermute rings of ``parallel.collectives`` (no monolithic
+all-gather / all-reduce in the compiled decode HLO).
+
+Sampling keys fold ``(request id, tokens generated)`` into the engine seed,
+so a request's random stream is independent of which other requests share
+its batch — this is what makes mid-flight joins bit-reproducible.
+
+Which (replicas x tp, slots) to deploy is the latency-SLO-constrained
+search ``core.planner.HybridPlanner.best_inference``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import (ModelApi, cache_evict_slot, make_slot_cache)
+from repro.train.steps import make_continuous_steps
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: Sequence[int]            # prompt token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: List[int]                # generated ids (stop token included)
+    logprobs: List[float]
+    finished_reason: str             # "eos" | "length"
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    slot: int
+    consumed: int = 0                # prompt tokens prefilled so far
+    n_gen: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    last_logits: Optional[jnp.ndarray] = None   # set once prefill completes
+
+    @property
+    def decoding(self) -> bool:
+        return self.last_logits is not None
+
+
+class ContinuousEngine:
+    """See module docstring.  ``prefill_chunk=0`` prefills each prompt in
+    one shot (still interleaved with decode ticks); > 0 caps the tokens per
+    prefill step.  ``mesh``/``model_axis``/``batch_axes`` route the decode
+    tick onto the collective-ring TP step when the arch and slot count
+    divide (``transformer.decode_slots_tp_supported``)."""
+
+    def __init__(self, api: ModelApi, params, *, n_slots: int, capacity: int,
+                 prefill_chunk: int = 0, temperature: float = 0.0,
+                 seed: int = 0, mesh=None, model_axis: Optional[str] = None,
+                 batch_axes=(), comm_chunks: int = 1, window=None):
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.prefill_chunk = prefill_chunk
+        self.temperature = temperature
+        self._base_key = jax.random.PRNGKey(seed)
+        self.cache = make_slot_cache(api.cfg, n_slots, capacity)
+        self._decode_tick, self._prefill_chunk = make_continuous_steps(
+            api, n_slots=n_slots, temperature=temperature, mesh=mesh,
+            model_axis=model_axis, batch_axes=batch_axes,
+            comm_chunks=comm_chunks, window=window)
+        self.queue: List[Request] = []
+        self.active: Dict[int, _Active] = {}       # slot -> state
+        self.results: List[RequestResult] = []
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request):
+        n = len(req.tokens)
+        if n + req.max_new_tokens > self.capacity:
+            raise ValueError(
+                f"request {req.rid}: prompt ({n}) + max_new_tokens "
+                f"({req.max_new_tokens}) = {n + req.max_new_tokens} exceeds "
+                f"slot capacity {self.capacity}")
+        self.queue.append(req)
+
+    def _admit(self):
+        free = [s for s in range(self.n_slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            self.cache = cache_evict_slot(self.cache, slot)
+            self.active[slot] = _Active(req=req, slot=slot)
+
+    def _finish(self, st: _Active, reason: str):
+        self.results.append(RequestResult(
+            rid=st.req.rid, prompt_len=len(st.req.tokens),
+            tokens=st.tokens, logprobs=st.logprobs, finished_reason=reason))
+        del self.active[st.slot]
+
+    # -- one scheduler step --------------------------------------------------
+
+    def _request_key(self, st: _Active):
+        # (rid, n_gen)-addressed stream: independent of batch composition
+        return jax.random.fold_in(
+            jax.random.fold_in(self._base_key, st.req.rid), st.n_gen)
+
+    def _sample_from(self, st: _Active):
+        """Sample st's next token from its held last-position logits (host
+        path used at the prefill->decode transition; decode-tick sampling
+        happens inside the jitted tick with the same key schedule)."""
+        lg = st.last_logits.astype(jnp.float32)
+        if self.temperature <= 0.0:
+            nxt = int(lg.argmax(-1))
+        else:
+            nxt = int(jax.random.categorical(
+                self._request_key(st), lg / self.temperature))
+        lp = float(jax.nn.log_softmax(lg, -1)[nxt])
+        return nxt, lp
+
+    def step(self) -> bool:
+        """Admit / one prefill chunk / one decode tick / evict.  Returns
+        True while any work remains."""
+        self._admit()
+
+        # (2) one prefill chunk for the head-of-line prefilling request
+        pre = next((st for st in self.active.values() if not st.decoding),
+                   None)
+        if pre is not None:
+            prompt = jnp.asarray(pre.req.tokens, jnp.int32)
+            n = len(pre.req.tokens)
+            chunk = (n - pre.consumed if self.prefill_chunk <= 0
+                     else min(self.prefill_chunk, n - pre.consumed))
+            toks = prompt[pre.consumed:pre.consumed + chunk][None]
+            self.cache, last = self._prefill_chunk(
+                self.params, self.cache, toks, pre.slot)
+            pre.consumed += chunk
+            if pre.consumed == n:
+                pre.last_logits = last[0]        # prefill done -> decoding
+
+        # (3) one decode tick over every decoding slot
+        deco = [st for st in self.active.values() if st.decoding]
+        if deco:
+            tokens = jnp.zeros((self.n_slots,), jnp.int32)
+            active = jnp.zeros((self.n_slots,), bool)
+            keys = jnp.zeros((self.n_slots, 2), jnp.uint32)
+            for st in deco:
+                # the token a decode tick consumes is sampled from the
+                # PREVIOUS position's logits: held host-side at the
+                # prefill->decode seam, in-tick afterwards
+                if not st.tokens:
+                    nxt, lp = self._sample_from(st)
+                    st.tokens.append(nxt)
+                    st.logprobs.append(lp)
+                    st.n_gen += 1
+            live = [st for st in deco
+                    if not self._hit_stop(st)
+                    and st.n_gen < st.req.max_new_tokens]
+            for st in live:
+                tokens = tokens.at[st.slot].set(st.tokens[-1])
+                active = active.at[st.slot].set(True)
+                keys = keys.at[st.slot].set(
+                    jnp.asarray(self._request_key(st), jnp.uint32))
+            if live:
+                self.cache, nxt, lp = self._decode_tick(
+                    self.params, self.cache, tokens, active, keys)
+                nxt, lp = jax.device_get((nxt, lp))
+                for st in live:
+                    st.tokens.append(int(nxt[st.slot]))
+                    st.logprobs.append(float(lp[st.slot]))
+                    st.n_gen += 1
+
+        # (4) evict finished requests, freeing slots for the next admit
+        for st in list(self.active.values()):
+            if not st.decoding:
+                continue
+            if self._hit_stop(st):
+                self._finish(st, "eos")
+            elif st.n_gen >= st.req.max_new_tokens:
+                st.tokens = st.tokens[:st.req.max_new_tokens]
+                st.logprobs = st.logprobs[:st.req.max_new_tokens]
+                self._finish(st, "length")
+        return bool(self.active or self.queue)
+
+    def _hit_stop(self, st: _Active) -> bool:
+        return (st.req.eos_id is not None and st.tokens
+                and st.tokens[-1] == st.req.eos_id)
+
+    def run(self, requests: Sequence[Request]) -> List[RequestResult]:
+        """Submit everything, step until drained, return results by rid."""
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return sorted(self.results, key=lambda r: r.rid)

@@ -1,14 +1,29 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop.
+"""Serving engines: static-batch generate loop + continuous batching.
 
-A deliberately small but real engine: static request batching, one jitted
-prefill, one jitted decode step reused across tokens, KV/state cache threaded
-functionally.  The decode_32k / long_500k dry-run shapes lower exactly the
-``decode_step`` this engine calls per token.
+Two tiers:
+
+``ServeEngine`` (this module) — static request batching: one jitted prefill,
+one jitted decode step reused across tokens, KV/state cache threaded
+functionally.  Supports ragged prompt batches (``prompt_lens`` — per-request
+first-token gather + per-request cache positions), EOS/stop-token early
+exit with per-request lengths, and an engine-level PRNG counter so keyless
+temperature sampling differs across calls.  The decode_32k / long_500k
+dry-run shapes lower exactly the ``decode_step`` this engine calls per token.
+
+``ContinuousEngine`` (``serve.continuous``) — the real serving path: a
+slotted KV cache (``models.api.make_slot_cache``) where requests are
+admitted into free slots mid-flight, chunked prefill interleaves with decode
+ticks so long prompts never stall the running batch, finished requests are
+evicted and their slots reused, and the decode tick can execute under a
+dp x tp mesh on the overlap-scheduled collective-matmul rings
+(``transformer.decode_slots_tp``).  The admission/slot model is documented
+there; the latency-SLO-constrained plan search lives in
+``core.planner.HybridPlanner.best_inference``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,53 +33,135 @@ from repro.models.api import ModelApi
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: jnp.ndarray          # (B, max_new)
-    logprobs: jnp.ndarray        # (B, max_new)
+    tokens: jnp.ndarray          # (B, max_new) — pad_id past each row's length
+    logprobs: jnp.ndarray        # (B, max_new) — 0.0 past each row's length
     prefill_len: int
+    lengths: Optional[jnp.ndarray] = None   # (B,) generated tokens per row,
+                                            # stop token included
+
+
+def _slot_capable(cfg) -> bool:
+    """Archs whose cache admits per-request positions (linear KV, no
+    recurrent/cross-attn state) — the gate for ``prompt_lens`` here and for
+    the slotted continuous engine."""
+    return not (cfg.rwkv or cfg.family == "hybrid" or cfg.encoder_layers
+                or cfg.n_prefix_embeds)
 
 
 class ServeEngine:
     def __init__(self, api: ModelApi, params, *, pctx=None, window=None,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, seed: int = 0):
         self.api = api
         self.params = params
         self.pctx = pctx
         self.window = window
         self.temperature = temperature
+        # engine-level PRNG stream: keyless generate() calls fold a call
+        # counter into this, so repeated sampling calls differ unless the
+        # caller pins an explicit key
+        self._base_key = jax.random.PRNGKey(seed)
+        self._n_calls = 0
         self._decode = jax.jit(
             lambda p, cache, batch: api.decode_fn(p, cache, batch, pctx,
                                                   window=window))
 
     def generate(self, prompt_batch: dict, *, max_new_tokens: int,
                  capacity: Optional[int] = None,
-                 key: Optional[jax.Array] = None) -> GenerationResult:
+                 key: Optional[jax.Array] = None,
+                 eos_id: Optional[int] = None,
+                 stop_tokens: Sequence[int] = (),
+                 prompt_lens=None) -> GenerationResult:
         """prompt_batch: dict(tokens (B, S) [, prefix/frames]).
 
-        Greedy when temperature == 0, else temperature sampling.
+        Greedy when temperature == 0, else temperature sampling.  Rows that
+        emit ``eos_id`` / any of ``stop_tokens`` are frozen (pad tokens,
+        0.0 logprobs) and the loop exits early once every row is finished;
+        ``GenerationResult.lengths`` reports per-row generated counts (stop
+        token included).  ``prompt_lens`` (B,) marks the valid prefix of
+        each left-aligned row in a ragged batch: the first token is sampled
+        from position ``len - 1`` (not the padded tail) and each row decodes
+        from its own cache position.
         """
         tokens = prompt_batch["tokens"]
         b, s = tokens.shape
-        cap = capacity or (s + max_new_tokens + 8)
+        cfg = self.api.cfg
+        cap = (s + max_new_tokens + 8) if capacity is None else capacity
+        window = cfg.sliding_window if self.window is None else self.window
+        if not cfg.rwkv and not window and cap < s + max_new_tokens:
+            raise ValueError(
+                f"KV cache capacity {cap} cannot hold prompt ({s}) + "
+                f"max_new_tokens ({max_new_tokens}) = {s + max_new_tokens} "
+                f"positions for {cfg.name}; pass capacity >= "
+                f"{s + max_new_tokens} (or omit it)")
+        if prompt_lens is not None:
+            prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+            if prompt_lens.shape != (b,):
+                raise ValueError(
+                    f"prompt_lens shape {prompt_lens.shape} != ({b},) for a "
+                    f"batch of {b} prompts")
+            if not _slot_capable(cfg):
+                raise ValueError(
+                    f"prompt_lens needs per-request cache positions, which "
+                    f"{cfg.name} (family={cfg.family}) does not support: "
+                    f"recurrent/cross-attn state has no per-position layout")
+            if window:
+                raise ValueError(
+                    f"prompt_lens is unsupported with a sliding-window ring "
+                    f"cache (window={window}); serve {cfg.name} with "
+                    f"window=0 or use serve.continuous (mask-windowed)")
+            lens = jax.device_get(prompt_lens)
+            if (lens < 1).any() or (lens > s).any():
+                raise ValueError(
+                    f"prompt_lens must lie in [1, {s}] (got {lens.tolist()})")
         logits, cache = self.api.prefill(self.params, prompt_batch, self.pctx,
                                          capacity=cap, window=self.window)
+        if prompt_lens is None:
+            last_logits = logits[:, -1]
+        else:
+            # ragged batch: row r's first token comes from its own last
+            # PROMPT position, and its decode stream starts at len_r — the
+            # per-row ``pos`` array routes decode_step into slot mode
+            last_logits = jnp.take_along_axis(
+                logits, (prompt_lens - 1)[:, None, None], axis=1)[:, 0]
+            cache["pos"] = prompt_lens
+        if key is None:
+            key = jax.random.fold_in(self._base_key, self._n_calls)
+        self._n_calls += 1
+
+        stop = [int(t) for t in stop_tokens]
+        if eos_id is not None and int(eos_id) not in stop:
+            stop.append(int(eos_id))
+        pad_id = int(eos_id) if eos_id is not None else (stop[0] if stop else 0)
+        stop_arr = jnp.asarray(stop, jnp.int32) if stop else None
+        finished = jnp.zeros((b,), bool)
+        lengths = jnp.zeros((b,), jnp.int32)
+
         out_tokens: List[jnp.ndarray] = []
         out_lp: List[jnp.ndarray] = []
-        last_logits = logits[:, -1]
-        if key is None:
-            key = jax.random.PRNGKey(0)
         for i in range(max_new_tokens):
             key, sub = jax.random.split(key)
             nxt = self._sample(last_logits, sub)
+            nxt = jnp.where(finished, pad_id, nxt)
             lp = jax.nn.log_softmax(last_logits.astype(jnp.float32), -1)
-            out_lp.append(jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0])
+            lp = jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0]
+            out_lp.append(jnp.where(finished, 0.0, lp))
             out_tokens.append(nxt)
+            lengths = lengths + (~finished).astype(jnp.int32)
+            if stop_arr is not None:
+                finished = finished | jnp.isin(nxt, stop_arr)
+                if bool(finished.all()):
+                    break
             step = {"tokens": nxt[:, None]}
             logits_d, cache = self._decode(self.params, cache, step)
-            last_logits = logits_d[:, 0]
+            last_logits = logits_d[:, -1]
+        n_pad = max_new_tokens - len(out_tokens)
+        if n_pad:
+            out_tokens += [jnp.full((b,), pad_id, jnp.int32)] * n_pad
+            out_lp += [jnp.zeros((b,), jnp.float32)] * n_pad
         return GenerationResult(
             tokens=jnp.stack(out_tokens, axis=1),
             logprobs=jnp.stack(out_lp, axis=1),
-            prefill_len=s)
+            prefill_len=s, lengths=lengths)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

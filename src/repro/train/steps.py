@@ -303,3 +303,66 @@ def make_serve_steps(api: ModelApi, *, pctx=None, window=None):
         return logits, new_cache
 
     return prefill_step, decode_step
+
+
+def make_continuous_steps(api: ModelApi, *, n_slots: int,
+                          temperature: float = 0.0, mesh=None,
+                          model_axis: Optional[str] = None, batch_axes=(),
+                          comm_chunks: int = 1, window=None):
+    """Jitted ``(decode_tick, prefill_chunk)`` pair for the continuous-
+    batching engine (``serve.continuous``).
+
+    ``decode_tick(params, cache, tokens, active, keys)`` runs ONE token step
+    for every slot of a slotted cache — sampling happens inside the jit, and
+    ``pos`` only advances for ``active`` slots (an inactive slot's write at
+    its frozen position is overwritten at its next admission).  When a mesh
+    with a >1 model axis is given and the arch/slot-count divides
+    (``transformer.decode_slots_tp_supported``), the tick executes
+    ``decode_slots_tp`` — the whole layer stack in one shard_map on the
+    chunked collective-matmul rings.  ``prefill_chunk(params, cache, tokens,
+    slot)`` extends one slot by a token chunk (slot-mode decode with t > 1,
+    causal within the chunk) and returns the chunk's last-position logits.
+    """
+    from repro.models import transformer as tf_mod
+
+    cfg = api.cfg
+    use_tp = (mesh is not None and model_axis is not None
+              and tf_mod.decode_slots_tp_supported(
+                  cfg, mesh, model_axis, batch_axes, n_slots,
+                  max(comm_chunks, 1)))
+
+    def _sample(last, keys):
+        last = last.astype(jnp.float32)
+        if temperature <= 0.0:
+            nxt = last.argmax(-1).astype(jnp.int32)
+        else:
+            nxt = jax.vmap(
+                lambda lg, k: jax.random.categorical(k, lg / temperature)
+            )(last, keys).astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(last, axis=-1),
+                                 nxt[:, None], axis=-1)[:, 0]
+        return nxt, lp
+
+    def decode_tick(params, cache, tokens, active, keys):
+        if use_tp:
+            logits, new_cache = tf_mod.decode_slots_tp(
+                cfg, params, cache, {"tokens": tokens[:, None]}, mesh=mesh,
+                model_axis=model_axis, batch_axes=batch_axes,
+                comm_chunks=comm_chunks, window_override=window)
+        else:
+            logits, new_cache = api.decode_fn(params, cache,
+                                              {"tokens": tokens[:, None]},
+                                              None, window)
+        nxt, lp = _sample(logits[:, -1], keys)
+        new_cache["pos"] = jnp.where(active, cache["pos"] + 1, cache["pos"])
+        return new_cache, nxt, lp
+
+    def prefill_chunk(params, cache, tokens, slot):
+        from repro.models.api import cache_extract_slot, cache_insert_slot
+        sl = cache_extract_slot(cache, slot)
+        logits, sl = api.decode_fn(params, sl, {"tokens": tokens}, None,
+                                   window)
+        return cache_insert_slot(cache, sl, slot), logits[:, -1]
+
+    return (jax.jit(decode_tick, donate_argnums=(1,)),
+            jax.jit(prefill_chunk, donate_argnums=(1,)))

@@ -92,3 +92,82 @@ def test_prefill_capacity_headroom():
     res = engine.generate(prompt, max_new_tokens=12, capacity=32)
     assert res.tokens.shape == (1, 12)
     assert np.isfinite(np.asarray(res.logprobs)).all()
+
+
+def test_undersized_capacity_rejected():
+    """Regression: an explicit capacity too small for prompt + max_new used
+    to silently overflow the KV cache — and capacity=0 was treated as
+    'unset' by the old ``capacity or (...)`` default."""
+    cfg, api, engine = _engine()
+    prompt = {"tokens": jnp.arange(4, dtype=jnp.int32)[None] + 1}
+    with pytest.raises(ValueError, match="capacity"):
+        engine.generate(prompt, max_new_tokens=12, capacity=8)
+    with pytest.raises(ValueError, match="capacity"):
+        engine.generate(prompt, max_new_tokens=12, capacity=0)
+
+
+def test_eos_stops_generation_and_reports_lengths():
+    """Regression: generate had no EOS support — every request burned all
+    max_new_tokens and returned post-EOS garbage."""
+    cfg, api, engine = _engine()
+    prompt = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] + 1}
+    ref = engine.generate(prompt, max_new_tokens=6)
+    first = int(np.asarray(ref.tokens)[0, 0])
+    res = engine.generate(prompt, max_new_tokens=6, eos_id=first)
+    toks = np.asarray(res.tokens)[0]
+    assert res.lengths is not None and int(res.lengths[0]) == 1
+    assert (toks == first).all()            # stop token, then pad (= eos)
+    assert np.asarray(res.logprobs)[0, 1:].sum() == 0.0  # frozen rows: lp 0
+
+    # stop_tokens spelling, and un-hit stops leave generation untouched
+    res2 = engine.generate(prompt, max_new_tokens=6, stop_tokens=(first,))
+    assert int(res2.lengths[0]) == 1
+    unseen = next(t for t in range(cfg.vocab_size)
+                  if t not in set(np.asarray(ref.tokens)[0].tolist()))
+    miss = engine.generate(prompt, max_new_tokens=6, eos_id=unseen)
+    assert int(miss.lengths[0]) == 6
+    np.testing.assert_array_equal(np.asarray(miss.tokens),
+                                  np.asarray(ref.tokens))
+
+
+def test_ragged_batch_matches_single_request():
+    """Regression: the first token was sampled from ``logits[:, -1]`` — a
+    PAD position for every row shorter than the batch max.  With
+    ``prompt_lens`` each row gathers its own len-1 logits and decodes from
+    its own cache position, bit-identical to running it alone."""
+    cfg, api, engine = _engine()
+    short = jnp.arange(3, dtype=jnp.int32)[None] + 7          # true prompt
+    long = jnp.arange(5, dtype=jnp.int32)[None] + 1
+    # left-aligned ragged batch: row 1 padded with a token that would skew
+    # logits[:, -1] if it leaked in
+    ragged = jnp.concatenate(
+        [long, jnp.concatenate([short, jnp.full((1, 2), 99, jnp.int32)], 1)])
+    res = engine.generate({"tokens": ragged}, max_new_tokens=6, capacity=32,
+                          prompt_lens=jnp.array([5, 3], jnp.int32))
+    solo_long = engine.generate({"tokens": long}, max_new_tokens=6,
+                                capacity=32)
+    solo_short = engine.generate({"tokens": short}, max_new_tokens=6,
+                                 capacity=32)
+    np.testing.assert_array_equal(np.asarray(res.tokens)[0],
+                                  np.asarray(solo_long.tokens)[0])
+    np.testing.assert_array_equal(np.asarray(res.tokens)[1],
+                                  np.asarray(solo_short.tokens)[0])
+
+    with pytest.raises(ValueError, match="prompt_lens"):
+        engine.generate({"tokens": ragged}, max_new_tokens=2,
+                        prompt_lens=jnp.array([5, 9], jnp.int32))
+
+
+def test_keyless_temperature_sampling_differs_across_calls():
+    """Regression: the default key was a fixed PRNGKey(0), so keyless
+    temperature calls were bit-identical.  The engine now folds a call
+    counter into its seed; explicit keys stay reproducible."""
+    cfg, api, engine = _engine(temperature=2.0)
+    prompt = {"tokens": jnp.arange(8, dtype=jnp.int32)[None] + 1}
+    a = engine.generate(prompt, max_new_tokens=8)
+    b = engine.generate(prompt, max_new_tokens=8)
+    assert not np.array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    k = jax.random.PRNGKey(5)
+    c = engine.generate(prompt, max_new_tokens=8, key=k)
+    d = engine.generate(prompt, max_new_tokens=8, key=k)
+    np.testing.assert_array_equal(np.asarray(c.tokens), np.asarray(d.tokens))
