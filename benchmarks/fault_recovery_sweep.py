@@ -1,0 +1,276 @@
+"""Fault-recovery sweep: checkpoint overhead, retry/restart recovery cost,
+and end-to-end preemption + corruption-fallback lanes.
+
+    PYTHONPATH=src python -m benchmarks.fault_recovery_sweep [--smoke]
+
+Emits ``BENCH_fault.json`` with three sections:
+
+- **checkpoint** — save/restore wall time and file size for the reduced
+  model's full TrainState, then training wall time across a checkpoint
+  cadence sweep with synchronous vs background saves: the background lane's
+  overhead-per-checkpoint is the number that says whether serialization is
+  off the step path.
+
+- **recovery** — in-process supervised recovery: a straight run vs the same
+  run under a seeded schedule that exhausts the step-retry budget AND
+  corrupts the newest checkpoint (forcing ``restore_latest_valid``'s
+  fallback to the previous one).  Reports restarts/retries, the wall-time
+  multiple of the faulted run, and asserts the recovered final state is
+  BIT-EQUAL to the straight run's — recovery that changes the answer is a
+  failure, not a slowdown.
+
+- **cli_lanes** — the real ``launch.train`` process boundary: ``kill@N``
+  preemption (exit 17, no cleanup) followed by ``--resume``, and a
+  corruption lane where the newest checkpoint is damaged before the resume
+  so restore must fall back.  Both lanes assert the resumed run's final
+  checkpoint is bit-identical to an uninterrupted run's, and report the
+  recovery wall time (resume process, including re-jit).
+
+All lanes run on the CPU host: the wall times calibrate *relative* overhead
+(sync vs background, straight vs faulted), not accelerator step times.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+import warnings
+
+ARCH = "llama3_2_1b"
+FULL = dict(steps=24, batch=8, seq=16, cadences=(0, 12, 6, 3),
+            fail_step=14, kill_step=18, ckpt_every=5)
+SMOKE = dict(steps=12, batch=4, seq=8, cadences=(0, 6, 3),
+             fail_step=10, kill_step=9, ckpt_every=4)
+
+
+def _leaves(fname):
+    import msgpack
+    payload = msgpack.unpackb(open(fname, "rb").read(), raw=False)
+    return payload["leaves"], payload["step"]
+
+
+def _bench_inprocess(cfgv):
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import (restore_checkpoint, save_checkpoint,
+                                  wait_for_saves)
+    from repro.configs import get_config
+    from repro.data import DataPipeline, make_lm_dataset
+    from repro.models import build_model
+    from repro.optim import adamw, constant_lr
+    from repro.train.fault import FaultInjector, parse_fault_schedule, \
+        run_supervised
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.steps import (eval_train_state, init_train_state,
+                                   make_train_step)
+
+    cfg = get_config(ARCH).reduced()
+    api = build_model(cfg)
+    opt = adamw(constant_lr(3e-3))
+    data = make_lm_dataset(vocab=min(cfg.vocab_size, 64),
+                           seq_len=cfgv["seq"], n_items=256)
+    batch = cfgv["batch"]
+
+    def pipe():
+        return DataPipeline(lambda e: iter(list(data.epoch(e, batch))),
+                            steps_per_epoch=data.steps_per_epoch(batch))
+
+    step_fn = jax.jit(make_train_step(api, opt), donate_argnums=(0,))
+    init_fn = lambda: init_train_state(api, opt, jax.random.PRNGKey(0))
+
+    # -- raw save/restore cost ----------------------------------------------
+    state = init_fn()
+    jax.block_until_ready(jax.tree.leaves(state))
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.perf_counter()
+        fname = save_checkpoint(td, state, 1)
+        t_save = time.perf_counter() - t0
+        size = os.path.getsize(fname)
+        t0 = time.perf_counter()
+        restored = restore_checkpoint(fname, eval_train_state(api, opt))
+        jax.block_until_ready(jax.tree.leaves(restored))
+        t_restore = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        save_checkpoint(td, state, 2, background=True)
+        t_bg_return = time.perf_counter() - t0     # time the step path sees
+        wait_for_saves()
+        t_bg_total = time.perf_counter() - t0
+    ckpt = {"bytes": size, "save_s": t_save, "restore_s": t_restore,
+            "background_return_s": t_bg_return,
+            "background_total_s": t_bg_total}
+
+    # -- cadence sweep: training wall vs ckpt_every, sync vs background ----
+    # warm the jit cache first so the no-checkpoint baseline row is not the
+    # one paying compile time
+    train_loop(step_fn, init_fn(), pipe(),
+               LoopConfig(total_steps=2, log_every=10 ** 9),
+               log_fn=lambda m: None)
+    cadence = []
+    for every in cfgv["cadences"]:
+        for background in ((False,) if every == 0 else (False, True)):
+            with tempfile.TemporaryDirectory() as td:
+                c = LoopConfig(total_steps=cfgv["steps"], ckpt_every=every,
+                               ckpt_dir=td if every else "",
+                               background_save=background,
+                               final_ckpt=False, log_every=10 ** 9)
+                t0 = time.perf_counter()
+                s = train_loop(step_fn, init_fn(), pipe(), c,
+                               log_fn=lambda m: None)
+                wall = time.perf_counter() - t0
+            cadence.append({"ckpt_every": every, "background": background,
+                            "wall_s": wall, "checkpoints": s["checkpoints"]})
+    base_wall = cadence[0]["wall_s"]
+    for row in cadence:
+        row["overhead_per_ckpt_s"] = (
+            (row["wall_s"] - base_wall) / row["checkpoints"]
+            if row["checkpoints"] else 0.0)
+
+    # -- supervised recovery: fail past retries + corrupt newest ckpt -------
+    t0 = time.perf_counter()
+    straight = train_loop(step_fn, init_fn(), pipe(),
+                          LoopConfig(total_steps=cfgv["steps"],
+                                     log_every=10 ** 9),
+                          log_fn=lambda m: None)
+    wall_straight = time.perf_counter() - t0
+    fs, ce = cfgv["fail_step"], cfgv["ckpt_every"]
+    corrupt_at = ((fs - 1) // ce) * ce      # newest checkpoint before fail
+    schedule = f"fail@{fs}x3, corrupt@{corrupt_at}:bitflip"
+    inj = FaultInjector(parse_fault_schedule(schedule), log_fn=lambda m: None)
+    with tempfile.TemporaryDirectory() as td:
+        c = LoopConfig(total_steps=cfgv["steps"], ckpt_every=ce, ckpt_dir=td,
+                       max_retries=1, retry_backoff_s=0.0, log_every=10 ** 9)
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # expected "skipping ckpt_*"
+            faulted = run_supervised(inj.wrap_step(step_fn), pipe(), c,
+                                     init_fn=init_fn,
+                                     like=eval_train_state(api, opt),
+                                     max_restarts=2, restart_backoff_s=0.0,
+                                     log_fn=lambda m: None,
+                                     on_checkpoint=inj.after_save)
+        wall_faulted = time.perf_counter() - t0
+    a = [np.asarray(x).tobytes()
+         for x in jax.tree.leaves(jax.device_get(straight["state"]))]
+    b = [np.asarray(x).tobytes()
+         for x in jax.tree.leaves(jax.device_get(faulted["state"]))]
+    recovery = {"schedule": schedule, "wall_straight_s": wall_straight,
+                "wall_faulted_s": wall_faulted,
+                "slowdown": wall_faulted / max(wall_straight, 1e-9),
+                "restarts": faulted["restarts"],
+                "retries": faulted["retries"],
+                "bit_equal": a == b}
+    assert recovery["bit_equal"], "recovered state != straight run"
+    return ckpt, cadence, recovery
+
+
+def _run_cli(args, env=None, check_rc=0):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.environ.get("PYTHONPATH", "src"),
+               **(env or {}))
+    t0 = time.perf_counter()
+    r = subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+                       capture_output=True, text=True, env=env, timeout=1800)
+    wall = time.perf_counter() - t0
+    if r.returncode != check_rc:
+        raise RuntimeError(f"rc={r.returncode} (want {check_rc})\n"
+                           f"{r.stdout}\n{r.stderr[-2000:]}")
+    return wall, r.stdout
+
+
+def _bench_cli_lanes(cfgv):
+    from repro.checkpoint import latest_checkpoint
+    from repro.train.fault import KILL_EXIT_CODE, corrupt_checkpoint
+
+    steps, kill = cfgv["steps"], cfgv["kill_step"]
+    base = ["--arch", ARCH, "--reduced", "--steps", str(steps),
+            "--batch", str(cfgv["batch"]), "--seq", str(cfgv["seq"]),
+            "--ckpt-every", str(cfgv["ckpt_every"])]
+    lanes = {}
+    with tempfile.TemporaryDirectory() as td:
+        d_straight = os.path.join(td, "straight")
+        wall_straight, _ = _run_cli(base + ["--ckpt-dir", d_straight])
+        ref_leaves, ref_step = _leaves(latest_checkpoint(d_straight))
+        lanes["straight"] = {"wall_s": wall_straight, "final_step": ref_step}
+
+        # preemption: kill@N, then a fresh process resumes
+        d = os.path.join(td, "kill")
+        wall_kill, _ = _run_cli(
+            base + ["--ckpt-dir", d, "--fault", f"kill@{kill}"],
+            check_rc=KILL_EXIT_CODE)
+        wall_resume, out = _run_cli(base + ["--ckpt-dir", d, "--resume"])
+        leaves, step = _leaves(latest_checkpoint(d))
+        lanes["kill_resume"] = {
+            "kill_at": kill, "wall_killed_s": wall_kill,
+            "wall_resume_s": wall_resume,
+            "restored": "[resume] restored" in out,
+            "bit_equal_final": (step == ref_step and leaves == ref_leaves)}
+
+        # corruption: damage the newest checkpoint; resume must fall back
+        d = os.path.join(td, "corrupt")
+        _run_cli(base + ["--ckpt-dir", d, "--fault", f"kill@{kill}"],
+                 check_rc=KILL_EXIT_CODE)
+        newest = latest_checkpoint(d)
+        corrupt_checkpoint(newest, "bitflip")
+        wall_resume, out = _run_cli(base + ["--ckpt-dir", d, "--resume"])
+        leaves, step = _leaves(latest_checkpoint(d))
+        lanes["corrupt_fallback"] = {
+            "corrupted": os.path.basename(newest),
+            "wall_resume_s": wall_resume,
+            "fell_back": os.path.basename(newest) not in out
+            and "[resume] restored" in out,
+            "bit_equal_final": (step == ref_step and leaves == ref_leaves)}
+    for name in ("kill_resume", "corrupt_fallback"):
+        assert lanes[name]["bit_equal_final"], f"{name}: final ckpt differs"
+    assert lanes["corrupt_fallback"]["fell_back"]
+    return lanes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fault.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the CI smoke lane")
+    args = ap.parse_args(argv)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    cfgv = SMOKE if args.smoke else FULL
+
+    ckpt, cadence, recovery = _bench_inprocess(cfgv)
+    cli_lanes = _bench_cli_lanes(cfgv)
+
+    rec = {"bench": "fault_recovery_sweep", "smoke": bool(args.smoke),
+           "arch": ARCH, **{k: cfgv[k] for k in ("steps", "batch", "seq")},
+           "checkpoint": ckpt, "cadence": cadence, "recovery": recovery,
+           "cli_lanes": cli_lanes}
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"fault_sweep,done,out={args.out},"
+          f"save_s={ckpt['save_s']:.3f},"
+          f"bg_return_s={ckpt['background_return_s']:.3f},"
+          f"recovery_bit_equal={recovery['bit_equal']},"
+          f"restarts={recovery['restarts']},"
+          f"kill_bit_equal={cli_lanes['kill_resume']['bit_equal_final']},"
+          f"corrupt_fell_back={cli_lanes['corrupt_fallback']['fell_back']}")
+    return 0
+
+
+def run(out: str = "BENCH_fault.json") -> None:
+    """benchmarks.run entry: subprocess so jax backend state stays clean."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fault_recovery_sweep",
+         "--out", out], env=env, text=True, capture_output=True, timeout=3600)
+    sys.stdout.write(r.stdout)
+    if r.returncode:
+        sys.stdout.write(r.stderr[-2000:])
+        print("fault_sweep,failed")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,9 +39,11 @@ def main() -> None:
         print("roofline,skipped (run launch/dryrun.py first)")
 
     if full:
-        from benchmarks import collective_overlap_sweep, pipeline_schedule_sweep
+        from benchmarks import (collective_overlap_sweep,
+                                fault_recovery_sweep, pipeline_schedule_sweep)
         pipeline_schedule_sweep.run()
         collective_overlap_sweep.run()
+        fault_recovery_sweep.run()
 
     print(f"benchmark,done,wall_s={time.time() - t0:.1f}")
 

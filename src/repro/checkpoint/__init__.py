@@ -5,43 +5,197 @@ deployment; under multi-controller each host would write its shard files —
 the directory layout already namespaces by shard), serialized with msgpack +
 raw little-endian buffers, and restored with ``device_put`` against the
 current mesh's NamedShardings so a checkpoint can be re-sharded across plan
-changes (e.g. resume a 16x16 run on 2x16x16).
+changes — this is the elastic-resume path: a 16-way-DP run's checkpoint
+restores bit-equal onto an 8- or 32-device mesh because the file holds the
+*global* (unsharded) value of every leaf.
+
+On-disk format (version 2)
+==========================
+
+One msgpack map per checkpoint file ``ckpt_{step:08d}.msgpack``::
+
+    {"version": 2,
+     "step":    <int>,
+     "treedef": <str(jax.tree.structure(state))>,
+     "manifest": [{"dtype": "float32", "shape": [4, 8], "crc32": <uint32>},
+                  ...],                      # one entry per leaf, tree order
+     "leaves":  [<raw little-endian bytes>, ...]}
+
+The manifest is the integrity contract: ``restore_checkpoint`` re-computes
+each leaf's CRC32 over the raw buffer and checks dtype/shape both against
+the manifest and against the ``like`` tree it restores into.  Failures are
+*typed*:
+
+- ``CheckpointCorruptionError`` — the file is damaged (truncated msgpack,
+  CRC mismatch, buffer/shape byte-count disagreement).  Recoverable by
+  falling back to an older checkpoint.
+- ``ValueError`` — the file is intact but does not match ``like`` (leaf
+  count, per-leaf dtype/shape): the caller is restoring into the wrong
+  architecture/optimizer.  Never silently skipped.
+
+``restore_latest_valid`` implements the fallback: it walks the directory's
+checkpoints newest-first and returns the first one that verifies and
+restores, warning about (and skipping) corrupt files — a seeded
+fault-injection schedule that bit-flips the newest checkpoint
+(``train.fault``) lands on the previous one instead of crashing the run.
+
+Writes are crash-safe: payload goes to a uniquely-named ``*.tmp-<pid>``
+sibling, is fsync'd, then atomically ``os.replace``'d into place, so a kill
+mid-save never yields a half-written ``ckpt_*.msgpack``; leftover ``.tmp``
+files from a previous incarnation are swept on the next save.
+``keep_last=N`` retains only the N newest checkpoints.  ``background=True``
+moves msgpack packing + CRC + disk I/O off the step critical path onto a
+writer thread (the device->host gather stays synchronous so donation of the
+live state is safe); ``wait_for_saves()`` joins all pending writes and
+re-raises their first error.
+
+Version-1 files (leaves as ``{"dtype","shape","data"}`` dicts, no CRC) are
+still restored — structural validation applies, integrity checking is best
+effort (byte counts only).
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+import threading
+import warnings
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-
-def _pack_leaf(x) -> dict:
-    arr = np.asarray(x)
-    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
-            "data": arr.tobytes()}
+FORMAT_VERSION = 2
 
 
-def _unpack_leaf(d) -> np.ndarray:
-    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+class CheckpointError(Exception):
+    """Base class for checkpoint failures."""
 
 
-def save_checkpoint(path: str, state: Any, step: Optional[int] = None) -> str:
-    """Serialize a pytree (TrainState or params) to ``path``/ckpt_{step}.msgpack."""
+class CheckpointCorruptionError(CheckpointError):
+    """The file on disk is damaged (truncation, bit rot, partial write)."""
+
+
+# -- background writer -------------------------------------------------------
+
+_IO_LOCK = threading.Lock()          # serializes finalize (rename + cleanup)
+_PENDING: List[threading.Thread] = []
+_PENDING_TMP: set = set()            # tmp paths owned by in-flight writers
+_BG_ERRORS: List[BaseException] = []
+
+
+def wait_for_saves() -> None:
+    """Join every pending background save; re-raise the first failure."""
+    while True:
+        with _IO_LOCK:
+            if not _PENDING:
+                break
+            t = _PENDING[0]
+        t.join()
+        with _IO_LOCK:
+            if t in _PENDING:
+                _PENDING.remove(t)
+    with _IO_LOCK:
+        if _BG_ERRORS:
+            err = _BG_ERRORS[0]
+            _BG_ERRORS.clear()
+            raise CheckpointError("background checkpoint save failed") from err
+
+
+def _sweep_orphan_tmps(path: str) -> None:
+    """Remove ``.tmp`` droppings from crashed runs (not in-flight writes)."""
+    try:
+        names = os.listdir(path)
+    except OSError:
+        return
+    for n in names:
+        if ".tmp" not in n:
+            continue
+        full = os.path.join(path, n)
+        with _IO_LOCK:
+            if full in _PENDING_TMP:
+                continue
+        try:
+            os.remove(full)
+        except OSError:
+            pass
+
+
+def _apply_retention(path: str, keep_last: int) -> None:
+    if keep_last <= 0:
+        return
+    for old in list_checkpoints(path)[:-keep_last]:
+        try:
+            os.remove(old)
+        except OSError:
+            pass
+
+
+# -- save --------------------------------------------------------------------
+
+def save_checkpoint(path: str, state: Any, step: Optional[int] = None, *,
+                    keep_last: int = 0, background: bool = False) -> str:
+    """Serialize a pytree (TrainState or params) to ``path``/ckpt_{step}.msgpack.
+
+    ``keep_last=N`` (N > 0) deletes all but the N newest checkpoints after a
+    successful write.  ``background=True`` gathers leaves to host
+    synchronously (so the caller may immediately donate ``state``) and runs
+    packing + CRC + write on a worker thread; call ``wait_for_saves()`` to
+    flush.  Returns the final checkpoint filename either way.
+    """
     os.makedirs(path, exist_ok=True)
     flat, treedef = jax.tree.flatten(state)
-    payload = {
-        "treedef": str(treedef),
-        "leaves": [_pack_leaf(x) for x in flat],
-    }
+    # device -> host now: the caller's next train step donates these buffers
+    host = [np.asarray(jax.device_get(x)) for x in flat]
     step = int(step if step is not None else _state_step(state))
     fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
-    tmp = fname + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, fname)
+    tmp = f"{fname}.tmp-{os.getpid()}"
+
+    def job():
+        manifest, leaves = [], []
+        for arr in host:
+            buf = np.ascontiguousarray(arr).tobytes()
+            manifest.append({"dtype": str(arr.dtype),
+                             "shape": list(arr.shape),
+                             "crc32": zlib.crc32(buf) & 0xFFFFFFFF})
+            leaves.append(buf)
+        payload = {"version": FORMAT_VERSION, "step": step,
+                   "treedef": str(treedef), "manifest": manifest,
+                   "leaves": leaves}
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        with _IO_LOCK:
+            os.replace(tmp, fname)
+            _PENDING_TMP.discard(tmp)
+        _apply_retention(path, keep_last)
+        _sweep_orphan_tmps(path)
+
+    if not background:
+        try:
+            job()
+        finally:
+            with _IO_LOCK:
+                _PENDING_TMP.discard(tmp)
+        return fname
+
+    with _IO_LOCK:
+        _PENDING_TMP.add(tmp)
+
+    def guarded():
+        try:
+            job()
+        except BaseException as e:                 # surfaced by wait_for_saves
+            with _IO_LOCK:
+                _BG_ERRORS.append(e)
+                _PENDING_TMP.discard(tmp)
+
+    t = threading.Thread(target=guarded, name=f"ckpt-save-{step}", daemon=True)
+    with _IO_LOCK:
+        _PENDING.append(t)
+    t.start()
     return fname
 
 
@@ -53,27 +207,157 @@ def _state_step(state) -> int:
         return 0
 
 
-def latest_checkpoint(path: str) -> Optional[str]:
+# -- directory queries -------------------------------------------------------
+
+def list_checkpoints(path: str) -> List[str]:
+    """All checkpoint files under ``path``, oldest first."""
     if not os.path.isdir(path):
-        return None
-    cands = sorted(f for f in os.listdir(path)
-                   if f.startswith("ckpt_") and f.endswith(".msgpack"))
-    return os.path.join(path, cands[-1]) if cands else None
+        return []
+    return [os.path.join(path, f) for f in sorted(os.listdir(path))
+            if f.startswith("ckpt_") and f.endswith(".msgpack")]
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    cands = list_checkpoints(path)
+    return cands[-1] if cands else None
+
+
+def checkpoint_step(fname: str) -> int:
+    """Step number encoded in a checkpoint filename."""
+    base = os.path.basename(fname)
+    try:
+        return int(base[len("ckpt_"):].split(".")[0])
+    except ValueError:
+        raise ValueError(f"not a checkpoint filename: {fname!r}") from None
+
+
+# -- load / verify -----------------------------------------------------------
+
+def _load_payload(fname: str) -> dict:
+    try:
+        with open(fname, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False,
+                                      strict_map_key=False)
+    except OSError:
+        raise
+    except Exception as e:                 # truncation, garbage, bad msgpack
+        raise CheckpointCorruptionError(
+            f"{fname}: unreadable msgpack payload ({type(e).__name__}: {e})"
+        ) from e
+    if not isinstance(payload, dict) or "leaves" not in payload:
+        raise CheckpointCorruptionError(
+            f"{fname}: payload is not a checkpoint map")
+    return payload
+
+
+def _normalize(payload: dict, fname: str) -> Tuple[List[dict], List[bytes]]:
+    """-> (manifest, raw buffers) for both v1 and v2 payloads."""
+    leaves = payload["leaves"]
+    if payload.get("version", 1) >= 2:
+        manifest = payload.get("manifest")
+        if not isinstance(manifest, list) or len(manifest) != len(leaves):
+            raise CheckpointCorruptionError(
+                f"{fname}: manifest/leaves length mismatch "
+                f"({'missing' if manifest is None else len(manifest)} vs "
+                f"{len(leaves)})")
+        return manifest, leaves
+    # v1: leaves are {"dtype","shape","data"} dicts with no CRC
+    manifest = [{"dtype": d["dtype"], "shape": d["shape"], "crc32": None}
+                for d in leaves]
+    return manifest, [d["data"] for d in leaves]
+
+
+def _decode_leaf(entry: dict, buf: bytes, fname: str, what: str) -> np.ndarray:
+    dtype = np.dtype(entry["dtype"])
+    shape = tuple(entry["shape"])
+    want = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    if len(buf) != want:
+        raise CheckpointCorruptionError(
+            f"{fname}: {what}: buffer holds {len(buf)} bytes, manifest "
+            f"{dtype}{list(shape)} needs {want}")
+    crc = entry.get("crc32")
+    if crc is not None and (zlib.crc32(buf) & 0xFFFFFFFF) != crc:
+        raise CheckpointCorruptionError(
+            f"{fname}: {what}: CRC32 mismatch (stored {crc:#010x}, "
+            f"computed {zlib.crc32(buf) & 0xFFFFFFFF:#010x}) — the leaf's "
+            f"bytes were corrupted on disk")
+    return np.frombuffer(buf, dtype=dtype).reshape(shape)
+
+
+def verify_checkpoint(fname: str) -> dict:
+    """Integrity-check every leaf (no ``like`` needed).  Returns
+    ``{"step", "n_leaves", "bytes", "version"}``; raises
+    ``CheckpointCorruptionError`` on damage."""
+    payload = _load_payload(fname)
+    manifest, bufs = _normalize(payload, fname)
+    total = 0
+    for i, (entry, buf) in enumerate(zip(manifest, bufs)):
+        _decode_leaf(entry, buf, fname, f"leaf {i}")
+        total += len(buf)
+    return {"step": payload.get("step", checkpoint_step(fname)),
+            "n_leaves": len(bufs), "bytes": total,
+            "version": payload.get("version", 1)}
+
+
+def _leaf_paths(like) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    def fmt(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path) or "<root>"
+    return [fmt(p) for p, _ in flat]
 
 
 def restore_checkpoint(fname: str, like: Any, shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; optionally re-shard with the
-    provided NamedSharding pytree."""
-    with open(fname, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+    provided NamedSharding pytree (the elastic grow/shrink path — leaves are
+    global values, ``device_put`` lays them out for whatever mesh is current).
+
+    Validates per-leaf integrity (CRC32) and structure: leaf count and every
+    leaf's dtype/shape against ``like``.  See the module docstring for the
+    error taxonomy."""
+    payload = _load_payload(fname)
+    manifest, bufs = _normalize(payload, fname)
     flat_like, treedef = jax.tree.flatten(like)
-    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
-    assert len(leaves) == len(flat_like), \
-        f"checkpoint has {len(leaves)} leaves, expected {len(flat_like)}"
+    if len(bufs) != len(flat_like):
+        raise ValueError(
+            f"{fname}: checkpoint has {len(bufs)} leaves but the restore "
+            f"target has {len(flat_like)} — the checkpoint was written for a "
+            f"different model/optimizer structure")
+    paths = _leaf_paths(like)
+    out_leaves = []
+    for i, (entry, buf, want) in enumerate(zip(manifest, bufs, flat_like)):
+        arr = _decode_leaf(entry, buf, fname, f"leaf {i} ({paths[i]})")
+        want_shape = tuple(getattr(want, "shape", np.shape(want)))
+        want_dtype = np.dtype(getattr(want, "dtype", np.asarray(want).dtype))
+        if arr.shape != want_shape or arr.dtype != want_dtype:
+            raise ValueError(
+                f"{fname}: leaf {i} ({paths[i]}): checkpoint holds "
+                f"{arr.dtype}{list(arr.shape)} but the restore target "
+                f"expects {want_dtype}{list(want_shape)}")
+        out_leaves.append(arr)
     if shardings is not None:
         flat_sh, _ = jax.tree.flatten(
             shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
-        out = [jax.device_put(l, s) for l, s in zip(leaves, flat_sh)]
+        if len(flat_sh) != len(out_leaves):
+            raise ValueError(
+                f"{fname}: shardings tree has {len(flat_sh)} leaves, "
+                f"expected {len(out_leaves)}")
+        out = [jax.device_put(l, s) for l, s in zip(out_leaves, flat_sh)]
     else:
-        out = [jnp.asarray(l) for l in leaves]
+        out = [jnp.asarray(l) for l in out_leaves]
     return jax.tree.unflatten(treedef, out)
+
+
+def restore_latest_valid(path: str, like: Any, shardings: Any = None
+                         ) -> Tuple[Optional[Any], Optional[str]]:
+    """Restore the newest checkpoint under ``path`` that passes integrity +
+    structure validation, falling back over corrupt/mismatched files
+    newest-first (each skip warns).  Returns ``(state, fname)`` or
+    ``(None, None)`` when no valid checkpoint exists."""
+    for fname in reversed(list_checkpoints(path)):
+        try:
+            return restore_checkpoint(fname, like, shardings), fname
+        except (CheckpointError, ValueError, OSError) as e:
+            warnings.warn(f"[checkpoint] skipping {os.path.basename(fname)}: "
+                          f"{e}", stacklevel=2)
+    return None, None

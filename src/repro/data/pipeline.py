@@ -1,14 +1,23 @@
-"""Host-side data pipeline: batching, device placement, prefetch.
+"""Host-side data pipeline: batching, device placement, prefetch, resume.
 
 ``DataPipeline`` wraps an epoch-iterator dataset and feeds sharded device
 batches (placing each host batch with the batch NamedShardings so pjit never
 re-lays-out inputs); one-deep prefetch overlaps host generation with device
 compute — enough for the synthetic datasets here while keeping the structure
 of a production loader.
+
+Exact-order resume: ``epoch(e, skip=n)`` drops the first ``n`` *host*
+batches of epoch ``e`` before any device placement, so a training run
+resuming at global step ``s`` consumes exactly the batches an uninterrupted
+run would have seen from step ``s`` on — no sample replayed, none dropped.
+``steps_per_epoch`` (when the dataset knows it) lets the resuming loop jump
+straight to ``(s // steps_per_epoch, s % steps_per_epoch)``; otherwise
+``count_epoch`` walks an epoch host-side so the loop can locate ``s``.
 """
 from __future__ import annotations
 
 import collections
+import itertools
 import threading
 from typing import Callable, Iterator, Optional
 
@@ -25,13 +34,44 @@ def shard_batch(batch: dict, shardings: Optional[dict] = None) -> dict:
 
 class DataPipeline:
     def __init__(self, epoch_fn: Callable[[int], Iterator[dict]],
-                 shardings: Optional[dict] = None, prefetch: int = 1):
+                 shardings: Optional[dict] = None, prefetch: int = 1,
+                 steps_per_epoch: Optional[int] = None):
         self.epoch_fn = epoch_fn
         self.shardings = shardings
         self.prefetch = prefetch
+        self.steps_per_epoch = steps_per_epoch
 
-    def epoch(self, epoch_idx: int) -> Iterator[dict]:
+    def count_epoch(self, epoch_idx: int) -> int:
+        """Number of batches epoch ``epoch_idx`` yields (host-side walk; used
+        by resume when ``steps_per_epoch`` is unknown)."""
+        if self.steps_per_epoch is not None:
+            return self.steps_per_epoch
+        return sum(1 for _ in self.epoch_fn(epoch_idx))
+
+    def locate(self, global_step: int):
+        """(epoch, batches-to-skip) positioning ``global_step`` in the
+        epoch stream — the exact-data-order resume arithmetic."""
+        if global_step <= 0:
+            return 0, 0
+        if self.steps_per_epoch:
+            return divmod(global_step, self.steps_per_epoch)
+        epoch, remaining = 0, global_step
+        while True:
+            n = self.count_epoch(epoch)
+            if n <= 0:
+                raise RuntimeError(
+                    f"cannot locate step {global_step} for resume: epoch "
+                    f"{epoch} yields no batches (after skipping "
+                    f"{global_step - remaining})")
+            if remaining < n:
+                return epoch, remaining
+            remaining -= n
+            epoch += 1
+
+    def epoch(self, epoch_idx: int, skip: int = 0) -> Iterator[dict]:
         it = self.epoch_fn(epoch_idx)
+        if skip:
+            it = itertools.islice(it, skip, None)
         if self.prefetch <= 0:
             for b in it:
                 yield shard_batch(b, self.shardings)

@@ -28,6 +28,20 @@ Tensor-MP and multi-DP plans likewise execute on a real local dp x mp mesh
 overlap-scheduled collective runtime (``parallel.collectives``: chunked
 collective-matmul rings for the Megatron matmuls, bucketed reduce-scatter
 DP grad sync), ``gspmd`` being the monolithic-collective escape hatch.
+
+Fault tolerance: ``--ckpt-dir``/``--ckpt-every`` write CRC-manifested
+checkpoints (``--keep-last`` retention, ``--background-save`` off the step
+path) with a guaranteed final checkpoint; ``--resume`` restores the newest
+*valid* one — re-sharded onto the current mesh, so a 16-way-DP run resumes
+on 8 or 32 devices — and continues with exact data order.  ``--fault``
+injects a deterministic failure schedule (``train.fault``), ``--max-retries``
+bounds in-place step retries, ``--max-restarts`` runs the whole loop under
+the checkpoint-restoring supervisor, ``--watchdog`` flags hung steps:
+
+    python -m repro.launch.train --arch llama3_2_1b --reduced --steps 30 \\
+        --ckpt-dir /tmp/ck --ckpt-every 10 --fault "kill@25"   # preempted
+    python -m repro.launch.train --arch llama3_2_1b --reduced --steps 30 \\
+        --ckpt-dir /tmp/ck --resume                            # recovers
 """
 from __future__ import annotations
 
@@ -118,6 +132,36 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100,
+                    help="checkpoint cadence in steps (with --ckpt-dir); a "
+                         "final checkpoint at loop exit is guaranteed either "
+                         "way")
+    ap.add_argument("--keep-last", type=int, default=0,
+                    help="retain only the N newest checkpoints (0 = all)")
+    ap.add_argument("--background-save", action="store_true",
+                    help="serialize + write checkpoints on a worker thread, "
+                         "off the step critical path")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest VALID checkpoint under "
+                         "--ckpt-dir (corrupt files are skipped with a "
+                         "warning) and continue with exact data order; the "
+                         "checkpoint re-shards onto the current mesh, so a "
+                         "run saved at one DP degree resumes on another "
+                         "(elastic grow/shrink)")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="bounded in-place retries per failed step "
+                         "(exponential backoff)")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="> 0: run under the fault supervisor — a crashed "
+                         "attempt restarts from the newest valid checkpoint "
+                         "up to N times")
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="> 0: flag (log + count) steps exceeding this many "
+                         "seconds")
+    ap.add_argument("--fault", default="",
+                    help="deterministic fault-injection schedule, e.g. "
+                         "'fail@5x2,kill@7,corrupt@10:bitflip,stall@3:0.4' "
+                         "(see repro.train.fault)")
     ap.add_argument("--max-local-devices", type=int, default=8,
                     help="cap on forced host devices for dp x stages "
                          "pipeline execution on CPU")
@@ -147,6 +191,14 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if cfg.family == "cnn":
+        # the CLI feeds the token-LM pipeline; a cnn arch would yield zero
+        # batches per epoch and spin forever
+        raise SystemExit(f"[data] {cfg.name}: the train CLI drives the "
+                         f"token-LM data pipeline; cnn archs train through "
+                         f"benchmarks/fig4_epochs.py")
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("[resume] --resume needs --ckpt-dir")
     budget = args.devices or 256
     plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg,
                                        comm_runtime=args.comm_runtime
@@ -232,8 +284,9 @@ def main():
     from repro.optim import adamw, warmup_cosine
     from repro.parallel.jaxcompat import set_mesh
     from repro.train.loop import LoopConfig, train_loop
-    from repro.train.steps import (_make_pctx, init_train_state,
-                                   make_train_step, shardings_for)
+    from repro.train.steps import (_make_pctx, eval_train_state,
+                                   init_train_state, make_train_step,
+                                   shardings_for)
 
     if pipeline or spmd:
         if jax.device_count() < dp * mp:
@@ -257,6 +310,7 @@ def main():
     pctx = _make_pctx(mesh, plan, batch_shardable=dp > 1) if spmd else None
     train_step = make_train_step(api, opt, mesh=mesh, plan=plan, pctx=pctx)
     state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    state_sh = None
     if pipeline and dp > 1:
         # dp x stages: batch sharded over the data axis, params/opt
         # replicated — GSPMD inserts the gradient all-reduce over "data"
@@ -283,21 +337,62 @@ def main():
     def epoch_fn(e):
         def gen():
             for b in data.epoch(e, args.batch):
-                if cfg.family in ("cnn",):
-                    continue
                 yield {"tokens": b["tokens"].astype(np.int32),
                        "labels": b["labels"].astype(np.int32)}
         return gen()
 
-    pipeline_data = DataPipeline(epoch_fn)
+    pipeline_data = DataPipeline(
+        epoch_fn, steps_per_epoch=data.steps_per_epoch(args.batch))
+    loop_cfg = LoopConfig(total_steps=args.steps,
+                          ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                          ckpt_dir=args.ckpt_dir,
+                          keep_last=args.keep_last,
+                          background_save=args.background_save,
+                          max_retries=args.max_retries,
+                          watchdog_timeout_s=args.watchdog)
+
+    # fault-injection harness: wraps the (jitted) step; the on_checkpoint
+    # hook lets the schedule corrupt just-written checkpoints
+    on_ckpt = None
+    if args.fault:
+        from repro.train.fault import FaultInjector, parse_fault_schedule
+        injector = FaultInjector(parse_fault_schedule(args.fault))
+        train_step = injector.wrap_step(train_step)
+        on_ckpt = injector.after_save
+
+    # elastic resume: the checkpoint stores global (unsharded) leaves, so
+    # device_put against the CURRENT mesh's shardings re-shards a run saved
+    # at any DP degree onto this one
+    if args.resume:
+        from repro.checkpoint import restore_latest_valid
+        restored, fname = restore_latest_valid(
+            args.ckpt_dir, eval_train_state(api, opt), state_sh)
+        if restored is not None:
+            state = restored
+            print(f"[resume] restored {os.path.basename(fname)} at step "
+                  f"{int(jax.device_get(state.step))} onto {dp}-way DP "
+                  f"x {mp}-way MP")
+        else:
+            print("[resume] no valid checkpoint found; starting fresh")
+
     with set_mesh(mesh):
-        summary = train_loop(train_step, state, pipeline_data,
-                             LoopConfig(total_steps=args.steps,
-                                        ckpt_every=100 if args.ckpt_dir else 0,
-                                        ckpt_dir=args.ckpt_dir))
+        if args.max_restarts > 0:
+            from repro.train.fault import run_supervised
+            summary = run_supervised(
+                train_step, pipeline_data, loop_cfg,
+                init_fn=lambda: init_train_state(api, opt,
+                                                 jax.random.PRNGKey(0)),
+                like=eval_train_state(api, opt), shardings=state_sh,
+                max_restarts=args.max_restarts, on_checkpoint=on_ckpt)
+        else:
+            summary = train_loop(train_step, state, pipeline_data, loop_cfg,
+                                 on_checkpoint=on_ckpt)
+    flags = "".join(
+        f" {k}={summary[k]}" for k in ("retries", "hangs", "restarts")
+        if summary.get(k))
     print(f"[done] steps={summary['steps']} final_loss="
           f"{summary['final_loss']:.4f} wall={summary['wall_s']:.1f}s "
-          f"(floor {data.entropy:.4f})")
+          f"(floor {data.entropy:.4f}){flags}")
 
 
 if __name__ == "__main__":

@@ -251,6 +251,51 @@ class ShardingRules:
                             self.params_specs(params_shape),
                             is_leaf=lambda x: isinstance(x, P))
 
+    def opt_specs(self, params_shape, opt_shape):
+        """PartitionSpec pytree for an optimizer-state shape-pytree.
+
+        Optimizer state trees mirror the params tree under wrapper keys
+        ("m", "v", "acc"), possibly with trailing accumulator keys ("vr" /
+        "vc" for adafactor).  Each opt leaf's spec resolves by PATH: strip
+        leading wrapper keys until the remainder resolves inside the params
+        spec tree, then derive factored-accumulator specs from the param's
+        spec.  Used by ``train.steps.shardings_for`` and by the elastic
+        resume path (restoring a checkpoint onto a different mesh needs the
+        full TrainState's shardings, optimizer state included)."""
+        p_spec = self.params_specs(params_shape)
+
+        def resolve(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            for start in range(len(keys)):
+                node = p_spec
+                consumed = 0
+                for k in keys[start:]:
+                    if isinstance(node, dict) and k in node:
+                        node = node[k]
+                        consumed += 1
+                    elif isinstance(node, (list, tuple)) and str(k).isdigit() \
+                            and int(k) < len(node):
+                        node = node[int(k)]
+                        consumed += 1
+                    else:
+                        break
+                if isinstance(node, P):
+                    rest = keys[start + consumed:]
+                    if not rest:
+                        return node if len(node) == len(leaf.shape) \
+                            else P(*([None] * len(leaf.shape)))
+                    if rest == ["vr"]:      # adafactor row accumulator
+                        return P(*node[:-1]) if len(node) else P()
+                    if rest == ["vc"]:      # adafactor col accumulator
+                        return P(*node[:-2], node[-1]) if len(node) >= 2 \
+                            else P()
+                    if rest == ["v"]:
+                        return node
+            return P(*([None] * len(leaf.shape)))
+
+        flat, tree = jax.tree_util.tree_flatten_with_path(opt_shape)
+        return tree.unflatten([resolve(p, l) for p, l in flat])
+
     def batch_specs(self, batch_shape):
         """Inputs: batch dim over dp axes (when divisible), rest replicated."""
         bax = self.batch_axes

@@ -10,6 +10,9 @@ The engine owns ONE slotted cache (``models.api.make_slot_cache``):
 
     queued --admit--> prefilling --last chunk--> decoding --eos/budget--> done
                        (slot held)                (slot held)            (slot freed)
+         \________________________ deadline_s ________________________/
+          an expired request exits from ANY state at the next step() —
+          slot freed, partial tokens returned flagged "timed_out"
 
 Per ``step()`` the engine (1) **admits** queued requests into free slots,
 (2) runs ONE prefill chunk for the head-of-line prefilling request —
@@ -38,7 +41,8 @@ search ``core.planner.HybridPlanner.best_inference``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +57,11 @@ class Request:
     tokens: Sequence[int]            # prompt token ids
     max_new_tokens: int
     eos_id: Optional[int] = None
+    # TTL in seconds from submit().  Once expired the request is evicted —
+    # queued or mid-flight — its slot freed, and its result returned with
+    # finished_reason="timed_out" and whatever tokens were generated.  One
+    # stalled long request can therefore never starve admission forever.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -61,7 +70,7 @@ class RequestResult:
     prompt_len: int
     tokens: List[int]                # generated ids (stop token included)
     logprobs: List[float]
-    finished_reason: str             # "eos" | "length"
+    finished_reason: str             # "eos" | "length" | "timed_out"
 
 
 @dataclasses.dataclass
@@ -89,13 +98,16 @@ class ContinuousEngine:
     def __init__(self, api: ModelApi, params, *, n_slots: int, capacity: int,
                  prefill_chunk: int = 0, temperature: float = 0.0,
                  seed: int = 0, mesh=None, model_axis: Optional[str] = None,
-                 batch_axes=(), comm_chunks: int = 1, window=None):
+                 batch_axes=(), comm_chunks: int = 1, window=None,
+                 clock: Callable[[], float] = time.monotonic):
         self.api = api
         self.params = params
         self.n_slots = n_slots
         self.capacity = capacity
         self.prefill_chunk = prefill_chunk
         self.temperature = temperature
+        self._clock = clock           # injectable for deterministic TTL tests
+        self._deadline: Dict[int, float] = {}    # rid -> absolute deadline
         self._base_key = jax.random.PRNGKey(seed)
         self.cache = make_slot_cache(api.cfg, n_slots, capacity)
         self._decode_tick, self._prefill_chunk = make_continuous_steps(
@@ -115,7 +127,29 @@ class ContinuousEngine:
                 f"request {req.rid}: prompt ({n}) + max_new_tokens "
                 f"({req.max_new_tokens}) = {n + req.max_new_tokens} exceeds "
                 f"slot capacity {self.capacity}")
+        if req.deadline_s is not None:
+            self._deadline[req.rid] = self._clock() + req.deadline_s
         self.queue.append(req)
+
+    def _expire(self):
+        """Evict every request past its deadline — mid-flight requests free
+        their slot (partial tokens returned), queued requests never admit."""
+        now = self._clock()
+        for st in list(self.active.values()):
+            dl = self._deadline.get(st.req.rid)
+            if dl is not None and now >= dl:
+                self._finish(st, "timed_out")
+        kept = []
+        for req in self.queue:
+            dl = self._deadline.get(req.rid)
+            if dl is not None and now >= dl:
+                self._deadline.pop(req.rid, None)
+                self.results.append(RequestResult(
+                    rid=req.rid, prompt_len=len(req.tokens), tokens=[],
+                    logprobs=[], finished_reason="timed_out"))
+            else:
+                kept.append(req)
+        self.queue = kept
 
     def _admit(self):
         free = [s for s in range(self.n_slots) if s not in self.active]
@@ -126,6 +160,7 @@ class ContinuousEngine:
             self.active[slot] = _Active(req=req, slot=slot)
 
     def _finish(self, st: _Active, reason: str):
+        self._deadline.pop(st.req.rid, None)
         self.results.append(RequestResult(
             rid=st.req.rid, prompt_len=len(st.req.tokens),
             tokens=st.tokens, logprobs=st.logprobs, finished_reason=reason))
@@ -152,8 +187,9 @@ class ContinuousEngine:
         return nxt, lp
 
     def step(self) -> bool:
-        """Admit / one prefill chunk / one decode tick / evict.  Returns
-        True while any work remains."""
+        """Expire / admit / one prefill chunk / one decode tick / evict.
+        Returns True while any work remains."""
+        self._expire()     # before admit: a freed slot admits THIS step
         self._admit()
 
         # (2) one prefill chunk for the head-of-line prefilling request

@@ -1,6 +1,13 @@
+from repro.train.fault import (Fault, FaultInjector, InjectedFault, Watchdog,
+                               corrupt_checkpoint, parse_fault_schedule,
+                               run_supervised)
 from repro.train.loop import LoopConfig, train_loop
-from repro.train.steps import (TrainState, init_train_state, make_serve_steps,
-                               make_train_step, shardings_for)
+from repro.train.steps import (TrainState, eval_train_state, init_train_state,
+                               make_serve_steps, make_train_step,
+                               shardings_for)
 
 __all__ = ["LoopConfig", "train_loop", "TrainState", "init_train_state",
-           "make_serve_steps", "make_train_step", "shardings_for"]
+           "eval_train_state", "make_serve_steps", "make_train_step",
+           "shardings_for", "Fault", "FaultInjector", "InjectedFault",
+           "Watchdog", "corrupt_checkpoint", "parse_fault_schedule",
+           "run_supervised"]

@@ -1,0 +1,249 @@
+"""Deterministic fault injection + the process-level training supervisor.
+
+Every failure mode the fault-tolerant runtime must survive is reproducible
+from a seeded schedule, so recovery is a *test*, not an anecdote:
+
+    faults = parse_fault_schedule("fail@5x2, corrupt@10:bitflip, kill@15")
+    inj = FaultInjector(faults)
+    summary = run_supervised(inj.wrap_step(train_step), pipeline, cfg,
+                             init_fn=..., on_checkpoint=inj.after_save)
+
+Fault kinds (``kind@step`` grammar, comma-separated):
+
+- ``fail@N`` / ``fail@NxT`` — the wrapped train step raises
+  ``InjectedFault`` when step N is about to run, T consecutive times
+  (default 1).  Exercises the loop's bounded retry and, when T exceeds
+  ``max_retries``, the supervisor's checkpoint-restore restart.
+- ``kill@N`` — simulated preemption: ``os._exit(KILL_EXIT_CODE)`` before
+  step N completes — no atexit, no cleanup, like SIGKILL.  Recovery is a
+  fresh process resuming from the newest valid checkpoint
+  (``launch.train --resume``).
+- ``corrupt@N`` / ``corrupt@N:truncate`` — damages the checkpoint written
+  *at* step N right after its save completes (``after_save`` hook):
+  ``bitflip`` flips one byte inside the leaf data, ``truncate`` cuts the
+  file in half.  Exercises CRC detection and ``restore_latest_valid``'s
+  fallback to the previous checkpoint.
+- ``stall@N:SECS`` — the step stalls SECS seconds before running (a hung
+  data pipeline / collective).  Exercises the loop's watchdog flagging.
+
+A fault at step N fires when step N is *about to run* (the last completed
+step is N-1), so "kill@N, resume" and an uninterrupted run execute the
+exact same sequence of step transitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+import zlib
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+from repro.checkpoint import restore_latest_valid
+
+KILL_EXIT_CODE = 17     # distinctive exit for injected preemption
+
+FAULT_KINDS = ("fail", "kill", "corrupt", "stall")
+CORRUPT_MODES = ("bitflip", "truncate")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the injector's wrapped step for ``fail`` faults."""
+
+
+@dataclasses.dataclass
+class Fault:
+    kind: str                 # "fail" | "kill" | "corrupt" | "stall"
+    step: int                 # the step the fault is keyed to
+    times: int = 1            # fail: consecutive raises before clearing
+    mode: str = "bitflip"     # corrupt: "bitflip" | "truncate"
+    seconds: float = 0.25     # stall: sleep duration
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.kind == "corrupt" and self.mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt mode {self.mode!r}; "
+                             f"expected one of {CORRUPT_MODES}")
+        if self.step < 1:
+            raise ValueError(f"fault step must be >= 1, got {self.step}")
+
+
+def parse_fault_schedule(spec: str) -> List[Fault]:
+    """Parse ``"fail@5x2, kill@7, corrupt@10:truncate, stall@3:0.4"``."""
+    faults = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "@" not in item:
+            raise ValueError(f"fault {item!r}: expected kind@step[...]")
+        kind, _, rest = item.partition("@")
+        kind = kind.strip()
+        arg = None
+        if ":" in rest:
+            rest, _, arg = rest.partition(":")
+        times = 1
+        if "x" in rest:
+            rest, _, t = rest.partition("x")
+            times = int(t)
+        step = int(rest)
+        if kind == "corrupt":
+            faults.append(Fault(kind, step, mode=arg or "bitflip"))
+        elif kind == "stall":
+            faults.append(Fault(kind, step,
+                                seconds=float(arg) if arg else 0.25))
+        else:
+            if arg is not None:
+                raise ValueError(f"fault {item!r}: {kind} takes no ':' arg")
+            faults.append(Fault(kind, step, times=times))
+    return faults
+
+
+def corrupt_checkpoint(fname: str, mode: str = "bitflip",
+                       seed: int = 0) -> None:
+    """Deterministically damage a checkpoint file in place."""
+    size = os.path.getsize(fname)
+    if mode == "truncate":
+        with open(fname, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return
+    if mode != "bitflip":
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    # land in the back half of the file — the leaf-data region, past the
+    # msgpack header — at a seed-deterministic offset
+    off = size // 2 + (zlib.crc32(str(seed).encode()) % max(size // 4, 1))
+    with open(fname, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([(b[0] if b else 0) ^ 0xFF]))
+
+
+class FaultInjector:
+    """Wraps the training step / checkpoint hook to fire a ``Fault``
+    schedule at reproducible points.  ``fired`` records ``(kind, step)`` in
+    firing order for assertions."""
+
+    def __init__(self, faults: Sequence[Fault],
+                 log_fn: Callable[[str], None] = print):
+        self.faults = [dataclasses.replace(f) for f in faults]
+        self.log_fn = log_fn
+        self.fired: List[tuple] = []
+
+    def _pending(self, kind: str, step: int) -> List[Fault]:
+        return [f for f in self.faults
+                if f.kind == kind and f.step == step and f.times > 0]
+
+    def wrap_step(self, train_step: Callable) -> Callable:
+        """Supervisor wrapper: checks the schedule against the step ABOUT to
+        run (``int(state.step) + 1``) before delegating.  Raising/killing
+        happens before the real step, so the held state stays retryable."""
+
+        def wrapped(state, batch):
+            step = int(jax.device_get(state.step)) + 1
+            for f in self._pending("stall", step):
+                f.times = 0
+                self.fired.append(("stall", step))
+                self.log_fn(f"[fault] stalling {f.seconds:.2f}s before "
+                            f"step {step}")
+                time.sleep(f.seconds)
+            for f in self._pending("kill", step):
+                self.fired.append(("kill", step))
+                self.log_fn(f"[fault] killing process before step {step} "
+                            f"(exit {KILL_EXIT_CODE})")
+                os._exit(KILL_EXIT_CODE)
+            for f in self._pending("fail", step):
+                f.times -= 1
+                self.fired.append(("fail", step))
+                raise InjectedFault(
+                    f"injected step failure at step {step} "
+                    f"({f.times} repeats left)")
+            return train_step(state, batch)
+
+        return wrapped
+
+    def after_save(self, fname: str, step: int) -> None:
+        """``on_checkpoint`` hook: corrupts the checkpoint written at the
+        scheduled step, right after its write completed."""
+        for f in self._pending("corrupt", step):
+            f.times = 0
+            self.fired.append(("corrupt", step))
+            self.log_fn(f"[fault] corrupting ({f.mode}) checkpoint "
+                        f"{os.path.basename(fname)}")
+            corrupt_checkpoint(fname, f.mode)
+
+
+class Watchdog:
+    """Arms a timer around each step; fires ``on_timeout(tag)`` if the step
+    does not ``disarm()`` within ``timeout_s``.  Detection only — it never
+    kills the step (a slow step completes; the flag marks it)."""
+
+    def __init__(self, timeout_s: float, on_timeout: Callable):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout
+        self._timer: Optional[threading.Timer] = None
+
+    def arm(self, tag) -> None:
+        self.disarm()
+        self._timer = threading.Timer(self.timeout_s, self.on_timeout, (tag,))
+        self._timer.daemon = True
+        self._timer.start()
+
+    def disarm(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def close(self) -> None:
+        self.disarm()
+
+
+def run_supervised(train_step: Callable, pipeline, cfg, *,
+                   init_fn: Callable[[], object],
+                   like=None, shardings=None, max_restarts: int = 2,
+                   restart_backoff_s: float = 0.05,
+                   log_fn: Callable[[str], None] = print,
+                   on_checkpoint: Optional[Callable] = None) -> dict:
+    """Process-level supervisor: run ``train_loop`` to completion, restarting
+    from the newest *valid* checkpoint (``restore_latest_valid`` skips
+    corrupt files) when an attempt dies, up to ``max_restarts`` times with
+    exponential backoff.  ``init_fn() -> state`` builds the step-0 state when
+    no checkpoint exists; ``like`` (default: ``jax.eval_shape(init_fn)``)
+    types the restore; ``shardings`` re-shards restored leaves onto the
+    current mesh — the elastic grow/shrink path.
+
+    Returns the completing attempt's summary plus ``restarts``."""
+    from repro.train.loop import train_loop
+
+    if like is None:
+        like = jax.eval_shape(init_fn)
+    attempt = 0
+    while True:
+        state, source = None, "fresh init"
+        if cfg.ckpt_dir:
+            restored, fname = restore_latest_valid(cfg.ckpt_dir, like,
+                                                   shardings)
+            if restored is not None:
+                state, source = restored, os.path.basename(fname)
+        if state is None:
+            state = init_fn()
+        if attempt:
+            log_fn(f"[supervisor] restart {attempt}/{max_restarts} "
+                   f"from {source}")
+        try:
+            summary = train_loop(train_step, state, pipeline, cfg,
+                                 log_fn=log_fn, on_checkpoint=on_checkpoint)
+            summary["restarts"] = attempt
+            return summary
+        except Exception as e:
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            delay = restart_backoff_s * (2 ** (attempt - 1))
+            log_fn(f"[supervisor] attempt died ({type(e).__name__}: {e}); "
+                   f"restarting in {delay:.2f}s")
+            time.sleep(delay)

@@ -39,6 +39,14 @@ def init_train_state(api: ModelApi, optimizer: Optimizer, key) -> TrainState:
                       step=jnp.zeros((), jnp.int32))
 
 
+def eval_train_state(api: ModelApi, optimizer: Optimizer) -> TrainState:
+    """Abstract TrainState (ShapeDtypeStruct leaves) — the ``like`` tree for
+    ``checkpoint.restore_checkpoint`` without allocating a real init (works
+    for the 1T-param configs on the CPU host)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(api, optimizer, k), jax.random.PRNGKey(0))
+
+
 def _make_pctx(mesh, plan: ParallelPlan, batch_shardable: bool,
                decode: bool = False) -> Optional[ParallelCtx]:
     if mesh is None or plan.model_axis is None:
@@ -221,48 +229,9 @@ def shardings_for(api: ModelApi, mesh, plan: ParallelPlan, optimizer: Optimizer,
     p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
                            is_leaf=lambda x: isinstance(x, P))
     opt_shape = jax.eval_shape(optimizer.init, params_shape)
-
-    # Optimizer state trees mirror the params tree under wrapper keys ("m",
-    # "v", "acc"), possibly with trailing accumulator keys ("vr"/"vc" for
-    # adafactor).  Resolve each opt leaf's spec by PATH: strip leading wrapper
-    # keys until the remainder resolves inside the params spec tree, then
-    # derive factored-accumulator specs from the param's spec.
-    def opt_spec_tree(opt_shape_tree):
-        def resolve(path, leaf):
-            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
-            for start in range(len(keys)):
-                node = p_spec
-                ok = True
-                consumed = 0
-                for k in keys[start:]:
-                    if isinstance(node, dict) and k in node:
-                        node = node[k]
-                        consumed += 1
-                    elif isinstance(node, (list, tuple)) and str(k).isdigit() \
-                            and int(k) < len(node):
-                        node = node[int(k)]
-                        consumed += 1
-                    else:
-                        break
-                if isinstance(node, P):
-                    rest = keys[start + consumed:]
-                    if not rest:
-                        return node if len(node) == len(leaf.shape) \
-                            else P(*([None] * len(leaf.shape)))
-                    if rest == ["vr"]:      # adafactor row accumulator
-                        return P(*node[:-1]) if len(node) else P()
-                    if rest == ["vc"]:      # adafactor col accumulator
-                        return P(*node[:-2], node[-1]) if len(node) >= 2 else P()
-                    if rest == ["v"]:
-                        return node
-                elif isinstance(node, dict) and not (keys[start + consumed:]):
-                    ok = False
-            return P(*([None] * len(leaf.shape)))
-
-        flat, tree = jax.tree_util.tree_flatten_with_path(opt_shape_tree)
-        return tree.unflatten([resolve(p, l) for p, l in flat])
-
-    o_spec = opt_spec_tree(opt_shape)
+    # path-based wrapper-key resolution lives with the rule engine so the
+    # elastic-resume path can derive full-state shardings too
+    o_spec = rules.opt_specs(params_shape, opt_shape)
     o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec,
                            is_leaf=lambda x: isinstance(x, P))
     state_shardings = TrainState(params=p_shard, opt_state=o_shard,

@@ -1,0 +1,493 @@
+"""Fault-injection lane: hardened checkpoints, supervised loop, elastic resume.
+
+The load-bearing pins:
+- checkpoint integrity is *typed*: structural mismatch vs the restore target
+  raises ``ValueError`` (the old bare ``assert`` vanished under ``python
+  -O``), on-disk damage raises ``CheckpointCorruptionError``, and
+  ``restore_latest_valid`` falls back over corrupt files newest-first;
+- a seeded fault schedule (step failures, checkpoint corruption, preemption
+  kills, stalls) recovers automatically and finishes with params/optimizer
+  state BIT-EQUAL to an uninterrupted run on the same topology — resume
+  replays no sample and drops none (exact data-order resume);
+- the kill@N + ``--resume`` CLI cycle is bit-equal across the schedule
+  (gpipe/1f1b) and comm-runtime (gspmd/overlapped) variants;
+- elastic DP grow/shrink: a 16-way-DP checkpoint restores BIT-EQUAL onto 8-
+  and 32-device meshes (params and optimizer state) and training continues.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptionError, checkpoint_step,
+                              latest_checkpoint, list_checkpoints,
+                              restore_checkpoint, restore_latest_valid,
+                              save_checkpoint, verify_checkpoint,
+                              wait_for_saves)
+from repro.configs import get_config
+from repro.data import DataPipeline, make_lm_dataset
+from repro.models import build_model
+from repro.optim import adamw, constant_lr
+from repro.train.fault import (Fault, FaultInjector, InjectedFault,
+                               KILL_EXIT_CODE, corrupt_checkpoint,
+                               parse_fault_schedule, run_supervised)
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.steps import (TrainState, eval_train_state, init_train_state,
+                               make_train_step)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# -- helpers -----------------------------------------------------------------
+
+def _tiny_state():
+    return TrainState(params={"w": jnp.arange(6.0).reshape(2, 3),
+                              "b": jnp.ones((3,), jnp.int32)},
+                      opt_state={"m": {"w": jnp.zeros((2, 3))}},
+                      step=jnp.asarray(4, jnp.int32))
+
+
+def _like(state):
+    return jax.tree.map(np.zeros_like, jax.device_get(state))
+
+
+def _leaves_bytes(fname):
+    payload = msgpack.unpackb(open(fname, "rb").read(), raw=False)
+    return payload["leaves"], payload["step"]
+
+
+def _leaves_arrays(fname):
+    payload = msgpack.unpackb(open(fname, "rb").read(), raw=False)
+    return [np.frombuffer(buf, np.dtype(m["dtype"])).reshape(m["shape"])
+            for m, buf in zip(payload["manifest"], payload["leaves"])
+            ], payload["step"]
+
+
+def _run_cli(args, expect_rc=0, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == expect_rc, (
+        f"rc={r.returncode} (expected {expect_rc})\nstdout:\n{r.stdout}"
+        f"\nstderr:\n{r.stderr[-3000:]}")
+    return r.stdout
+
+
+def _run_py(code, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, (f"stdout:\n{r.stdout}\n"
+                               f"stderr:\n{r.stderr[-3000:]}")
+    return r.stdout
+
+
+# -- hardened checkpoint format ----------------------------------------------
+
+def test_restore_leaf_count_mismatch_raises_value_error(tmp_path):
+    """Regression: the old bare ``assert`` on leaf count silently vanished
+    under ``python -O``; the check is now a shaped ValueError."""
+    state = _tiny_state()
+    f = save_checkpoint(str(tmp_path), state, 4)
+    like = _like(state)
+    with pytest.raises(ValueError, match="4 leaves.*3 — .*different"):
+        restore_checkpoint(f, {"params": like.params, "step": like.step})
+
+
+def test_restore_validates_per_leaf_dtype_and_shape(tmp_path):
+    state = _tiny_state()
+    f = save_checkpoint(str(tmp_path), state, 4)
+    like = _like(state)
+    wrong_dtype = dataclasses.replace(
+        like, params=dict(like.params, b=np.zeros((3,), np.float32)))
+    with pytest.raises(ValueError, match=r"params/b.*int32\[3\].*expects "
+                                         r"float32"):
+        restore_checkpoint(f, wrong_dtype)
+    wrong_shape = dataclasses.replace(
+        like, params=dict(like.params, w=np.zeros((3, 2), np.float32)))
+    with pytest.raises(ValueError, match=r"params/w.*\[2, 3\].*\[3, 2\]"):
+        restore_checkpoint(f, wrong_shape)
+
+
+def test_crc_detects_bitflip_and_fallback_restores_previous(tmp_path):
+    state = _tiny_state()
+    f1 = save_checkpoint(str(tmp_path), state, 1)
+    state2 = dataclasses.replace(state, step=jnp.asarray(2, jnp.int32))
+    f2 = save_checkpoint(str(tmp_path), state2, 2)
+    corrupt_checkpoint(f2, "bitflip")
+    like = _like(state)
+    with pytest.raises((CheckpointCorruptionError, ValueError)):
+        restore_checkpoint(f2, like)
+    with pytest.warns(UserWarning, match="skipping ckpt_00000002"):
+        restored, fname = restore_latest_valid(str(tmp_path), like)
+    assert fname == f1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_truncation_detected(tmp_path):
+    state = _tiny_state()
+    f = save_checkpoint(str(tmp_path), state, 1)
+    corrupt_checkpoint(f, "truncate")
+    with pytest.raises(CheckpointCorruptionError):
+        verify_checkpoint(f)
+    with pytest.warns(UserWarning, match="skipping"):
+        assert restore_latest_valid(str(tmp_path),
+                                    _like(state)) == (None, None)
+
+
+def test_verify_checkpoint_reports_manifest(tmp_path):
+    state = _tiny_state()
+    f = save_checkpoint(str(tmp_path), state, 7)
+    info = verify_checkpoint(f)
+    assert info["step"] == 7 and info["version"] == 2
+    assert info["n_leaves"] == len(jax.tree.leaves(state))
+    assert checkpoint_step(f) == 7
+
+
+def test_keep_last_retention_and_orphan_tmp_cleanup(tmp_path):
+    state = _tiny_state()
+    orphan = tmp_path / "ckpt_00000001.msgpack.tmp-9999"
+    orphan.write_bytes(b"half-written garbage from a dead process")
+    for s in range(1, 6):
+        save_checkpoint(str(tmp_path), state, s, keep_last=2)
+    names = [os.path.basename(p) for p in list_checkpoints(str(tmp_path))]
+    assert names == ["ckpt_00000004.msgpack", "ckpt_00000005.msgpack"]
+    assert not orphan.exists()
+    assert not [n for n in os.listdir(tmp_path) if ".tmp" in n]
+
+
+def test_background_save_is_bit_equal_to_sync(tmp_path):
+    state = _tiny_state()
+    f_sync = save_checkpoint(str(tmp_path / "a"), state, 3)
+    f_bg = save_checkpoint(str(tmp_path / "b"), state, 3, background=True)
+    wait_for_saves()
+    la, _ = _leaves_bytes(f_sync)
+    lb, _ = _leaves_bytes(f_bg)
+    assert la == lb
+    verify_checkpoint(f_bg)
+
+
+def test_legacy_v1_checkpoint_still_restores(tmp_path):
+    state = _tiny_state()
+    flat, treedef = jax.tree.flatten(state)
+    v1 = {"treedef": str(treedef),
+          "leaves": [{"dtype": str(np.asarray(x).dtype),
+                      "shape": list(np.asarray(x).shape),
+                      "data": np.asarray(x).tobytes()} for x in flat]}
+    f = str(tmp_path / "ckpt_00000004.msgpack")
+    with open(f, "wb") as fh:
+        fh.write(msgpack.packb(v1, use_bin_type=True))
+    restored = restore_checkpoint(f, _like(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- fault schedule / injector -----------------------------------------------
+
+def test_parse_fault_schedule():
+    faults = parse_fault_schedule(
+        "fail@5x2, kill@7, corrupt@10:truncate, stall@3:0.4, corrupt@12")
+    assert [(f.kind, f.step) for f in faults] == [
+        ("fail", 5), ("kill", 7), ("corrupt", 10), ("stall", 3),
+        ("corrupt", 12)]
+    assert faults[0].times == 2
+    assert faults[2].mode == "truncate" and faults[4].mode == "bitflip"
+    assert faults[3].seconds == pytest.approx(0.4)
+    with pytest.raises(ValueError, match="kind@step"):
+        parse_fault_schedule("fail5")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault_schedule("explode@3")
+    with pytest.raises(ValueError, match="unknown corrupt mode"):
+        Fault("corrupt", 3, mode="scribble")
+
+
+def _recording_pipeline(n_per_epoch=5, known_spe=True):
+    def epoch_fn(e):
+        return iter([{"eid": np.asarray(e), "bid": np.asarray(i)}
+                     for i in range(n_per_epoch)])
+    return DataPipeline(epoch_fn,
+                        steps_per_epoch=n_per_epoch if known_spe else None)
+
+
+def _recording_step(log):
+    def step(state, batch):
+        log.append((int(batch["eid"]), int(batch["bid"])))
+        return (TrainState(state.params, state.opt_state, state.step + 1),
+                {"loss": jnp.asarray(1.0)})
+    return step
+
+
+def _zero_state(step=0):
+    return TrainState(params={"w": jnp.zeros(())}, opt_state=(),
+                      step=jnp.asarray(step, jnp.int32))
+
+
+@pytest.mark.parametrize("known_spe", [True, False])
+def test_exact_data_order_resume(known_spe):
+    """Resume at step s consumes exactly the batches an uninterrupted run
+    sees from step s on — across an epoch boundary, no replay, no drop."""
+    straight, resumed = [], []
+    cfg = LoopConfig(total_steps=12, log_every=100)
+    train_loop(_recording_step(straight), _zero_state(0),
+               _recording_pipeline(known_spe=known_spe), cfg,
+               log_fn=lambda m: None)
+    train_loop(_recording_step(resumed), _zero_state(7),
+               _recording_pipeline(known_spe=known_spe), cfg,
+               log_fn=lambda m: None)
+    assert len(straight) == 12
+    assert straight[7:] == resumed
+    assert straight == [(e, i) for e in range(3) for i in range(5)][:12]
+
+
+def test_empty_epoch_raises_instead_of_spinning():
+    pipe = DataPipeline(lambda e: iter([]))
+    with pytest.raises(RuntimeError, match="empty epoch"):
+        train_loop(_recording_step([]), _zero_state(0), pipe,
+                   LoopConfig(total_steps=3), log_fn=lambda m: None)
+
+
+def test_injected_failure_retried_in_place():
+    """fail@3 with max_retries=1: the loop retries the same batch from the
+    held state and completes with no step lost or duplicated."""
+    log = []
+    inj = FaultInjector(parse_fault_schedule("fail@3"),
+                        log_fn=lambda m: None)
+    cfg = LoopConfig(total_steps=6, max_retries=1, retry_backoff_s=0.0)
+    summary = train_loop(inj.wrap_step(_recording_step(log)), _zero_state(0),
+                         _recording_pipeline(), cfg, log_fn=lambda m: None)
+    assert summary["retries"] == 1
+    assert inj.fired == [("fail", 3)]
+    assert summary["steps"] == 6 and len(log) == 6
+    assert log == [(0, i) for i in range(5)] + [(1, 0)]
+
+
+def test_retry_exhaustion_kills_attempt_and_propagates():
+    inj = FaultInjector([Fault("fail", 2, times=5)], log_fn=lambda m: None)
+    with pytest.raises(InjectedFault):
+        train_loop(inj.wrap_step(_recording_step([])), _zero_state(0),
+                   _recording_pipeline(),
+                   LoopConfig(total_steps=4, max_retries=1,
+                              retry_backoff_s=0.0),
+                   log_fn=lambda m: None)
+
+
+def test_watchdog_flags_injected_stall():
+    inj = FaultInjector(parse_fault_schedule("stall@2:0.25"),
+                        log_fn=lambda m: None)
+    cfg = LoopConfig(total_steps=4, watchdog_timeout_s=0.05)
+    summary = train_loop(inj.wrap_step(_recording_step([])), _zero_state(0),
+                         _recording_pipeline(), cfg, log_fn=lambda m: None)
+    assert summary["hangs"] >= 1
+    assert summary["steps"] == 4          # the stalled step still completed
+    assert inj.fired == [("stall", 2)]
+
+
+def test_final_checkpoint_guaranteed_at_loop_exit(tmp_path):
+    """ckpt_every=0 still leaves a resumable final checkpoint."""
+    cfg = LoopConfig(total_steps=5, ckpt_every=0, ckpt_dir=str(tmp_path))
+    summary = train_loop(_recording_step([]), _zero_state(0),
+                         _recording_pipeline(), cfg, log_fn=lambda m: None)
+    f = latest_checkpoint(str(tmp_path))
+    assert f is not None and checkpoint_step(f) == 5
+    assert summary["last_checkpoint_step"] == 5
+
+
+# -- supervised end-to-end recovery (real model, in-process) -----------------
+
+def _lm_setup(steps=8, batch=4, seq=8):
+    cfg = dataclasses.replace(get_config("llama3_2_1b").reduced(),
+                              vocab_size=32)
+    api = build_model(cfg)
+    opt = adamw(constant_lr(3e-3))
+    data = make_lm_dataset(vocab=32, seq_len=seq, n_items=64)
+
+    def epoch_fn(e):
+        return iter(list(data.epoch(e, batch)))
+
+    pipe = DataPipeline(epoch_fn, steps_per_epoch=data.steps_per_epoch(batch))
+    step_fn = jax.jit(make_train_step(api, opt), donate_argnums=(0,))
+    init_fn = lambda: init_train_state(api, opt, jax.random.PRNGKey(0))
+    return api, opt, pipe, step_fn, init_fn
+
+
+def test_supervisor_recovers_bit_equal_to_uninterrupted(tmp_path):
+    """The acceptance pin, in-process: a schedule that (a) fails step 5 past
+    the retry budget and (b) corrupts the newest checkpoint recovers by
+    falling back to the last valid checkpoint and finishes with params AND
+    optimizer state bit-equal to a straight run."""
+    api, opt, pipe, step_fn, init_fn = _lm_setup()
+    cfg = LoopConfig(total_steps=8, ckpt_every=2, ckpt_dir=str(tmp_path),
+                     max_retries=1, retry_backoff_s=0.0, log_every=100)
+
+    straight = train_loop(step_fn, init_fn(), pipe,
+                          dataclasses.replace(cfg, ckpt_dir=""),
+                          log_fn=lambda m: None)
+
+    # fail@5 x3 exhausts max_retries=1 -> attempt dies after the step-4
+    # checkpoint; corrupt@4 damages that checkpoint, forcing the fallback
+    # to the step-2 one.  The supervisor restores and re-runs 3..8.
+    inj = FaultInjector(parse_fault_schedule("fail@5x3, corrupt@4:bitflip"),
+                        log_fn=lambda m: None)
+    with pytest.warns(UserWarning, match="skipping ckpt_00000004"):
+        summary = run_supervised(inj.wrap_step(step_fn), pipe, cfg,
+                                 init_fn=init_fn,
+                                 like=eval_train_state(api, opt),
+                                 max_restarts=2, restart_backoff_s=0.0,
+                                 log_fn=lambda m: None,
+                                 on_checkpoint=inj.after_save)
+    assert summary["restarts"] == 1
+    assert summary["steps"] == 8
+    assert ("corrupt", 4) in inj.fired and ("fail", 5) in inj.fired
+    a = jax.device_get(straight["state"])
+    b = jax.device_get(summary["state"])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- CLI kill + resume (subprocess) ------------------------------------------
+
+def _cli_base(ckpt_dir, extra=(), steps=12):
+    return ["--arch", "llama3_2_1b", "--reduced", "--steps", str(steps),
+            "--batch", "8", "--seq", "16", "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "5"] + list(extra)
+
+
+def _final_ckpt_leaves(ckpt_dir, expect_step):
+    f = latest_checkpoint(ckpt_dir)
+    assert f is not None, ckpt_dir
+    leaves, step = _leaves_bytes(f)
+    assert step == expect_step, (step, expect_step)
+    return leaves
+
+
+def test_cli_kill_and_resume_bit_equal():
+    """Preemption via the real CLI: kill@9 (after the step-5 checkpoint),
+    then --resume; the final checkpoint is bit-identical to a straight
+    run's, params and optimizer state included."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        d_kill = os.path.join(td, "kill")
+        d_straight = os.path.join(td, "straight")
+        _run_cli(_cli_base(d_kill, ["--fault", "kill@9"]),
+                 expect_rc=KILL_EXIT_CODE)
+        assert checkpoint_step(latest_checkpoint(d_kill)) == 5
+        out = _run_cli(_cli_base(d_kill, ["--resume"]))
+        assert "restored ckpt_00000005" in out
+        assert "resuming at step 5" in out
+        _run_cli(_cli_base(d_straight))
+        assert (_final_ckpt_leaves(d_kill, 12)
+                == _final_ckpt_leaves(d_straight, 12))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", [
+    ("pipe-gpipe", ["--parallel", "pipe=2,micro=2,sched=gpipe"]),
+    ("pipe-1f1b", ["--parallel", "pipe=2,micro=2,sched=1f1b"]),
+    ("dp-gspmd", ["--parallel", "dp=2,mp=1"]),
+    ("dp-overlapped", ["--parallel", "dp=2,mp=1",
+                       "--comm-runtime", "overlapped"]),
+], ids=lambda v: v[0])
+def test_cli_kill_resume_bit_equal_across_runtimes(variant):
+    """Kill-and-resume bit-equality must hold whichever runtime carries the
+    step: pipeline schedules (gpipe/1f1b) and comm runtimes
+    (gspmd/overlapped bucketed DP sync)."""
+    import tempfile
+    _, extra = variant
+    with tempfile.TemporaryDirectory() as td:
+        d_kill = os.path.join(td, "kill")
+        d_straight = os.path.join(td, "straight")
+        _run_cli(_cli_base(d_kill, extra + ["--fault", "kill@9"], steps=10),
+                 expect_rc=KILL_EXIT_CODE)
+        _run_cli(_cli_base(d_kill, extra + ["--resume"], steps=10))
+        _run_cli(_cli_base(d_straight, extra, steps=10))
+        assert (_final_ckpt_leaves(d_kill, 10)
+                == _final_ckpt_leaves(d_straight, 10))
+
+
+# -- elastic DP grow/shrink resume -------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dp_new", [8, 32])
+def test_elastic_dp_grow_shrink_resume(dp_new, tmp_path):
+    """A 16-way-DP run killed mid-flight resumes on 8 or 32 devices: the
+    re-sharded restore is BIT-EQUAL to the checkpoint (params and optimizer
+    state, pinned inside the resized-mesh subprocess), and training
+    continues to completion with a final checkpoint whose params match the
+    uninterrupted 16-way run at fp32 round-off (cross-topology gradient
+    reductions reassociate, so exact bitness across DP degrees is not a
+    meaningful target — same-topology bitness is pinned above)."""
+    d16 = str(tmp_path / "dp16")
+    d16_straight = str(tmp_path / "dp16_straight")
+    args16 = ["--arch", "llama3_2_1b", "--reduced", "--steps", "6",
+              "--batch", "32", "--seq", "8", "--parallel", "dp=16,mp=1",
+              "--max-local-devices", "16", "--ckpt-every", "3"]
+    _run_cli(args16 + ["--ckpt-dir", d16, "--fault", "kill@5"],
+             expect_rc=KILL_EXIT_CODE)
+    ck = latest_checkpoint(d16)
+    assert checkpoint_step(ck) == 3
+
+    # inside the resized mesh: restore with re-shard, then pin bit-equality
+    # of every leaf against the raw checkpoint buffers
+    out = _run_py(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={dp_new}")
+        import jax, msgpack, numpy as np
+        from repro.checkpoint import restore_checkpoint
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import build_model
+        from repro.optim import adamw, warmup_cosine
+        from repro.parallel.plan import ParallelPlan
+        from repro.train.steps import eval_train_state, shardings_for
+        cfg = get_config("llama3_2_1b").reduced()
+        api = build_model(cfg)
+        opt = adamw(warmup_cosine(3e-3, 20, 6))
+        mesh = make_mesh(dp={dp_new}, mp=1)
+        plan = ParallelPlan(dp_axes=("data",), model_axis=None)
+        i32 = jax.numpy.int32
+        specs = {{"tokens": jax.ShapeDtypeStruct((32, 8), i32),
+                  "labels": jax.ShapeDtypeStruct((32, 8), i32)}}
+        state_sh, _ = shardings_for(api, mesh, plan, opt, specs)
+        state = restore_checkpoint({ck!r}, eval_train_state(api, opt),
+                                   state_sh)
+        host = [np.asarray(x) for x in jax.tree.leaves(jax.device_get(state))]
+        raw = msgpack.unpackb(open({ck!r}, "rb").read(), raw=False)
+        assert len(host) == len(raw["leaves"])
+        for i, (h, b) in enumerate(zip(host, raw["leaves"])):
+            assert h.tobytes() == b, f"leaf {{i}} not bit-equal after reshard"
+        print("RESHARD_BITEQUAL", len(host))
+    """)
+    assert "RESHARD_BITEQUAL" in out
+
+    # continue training on the new DP degree through the CLI resume path
+    out = _run_cli(["--arch", "llama3_2_1b", "--reduced", "--steps", "6",
+                    "--batch", "32", "--seq", "8",
+                    "--parallel", f"dp={dp_new},mp=1",
+                    "--max-local-devices", str(dp_new),
+                    "--ckpt-every", "3", "--ckpt-dir", d16, "--resume"])
+    assert f"onto {dp_new}-way DP" in out
+    assert "resuming at step 3" in out
+
+    # uninterrupted 16-way reference: same steps, no faults
+    _run_cli(args16 + ["--ckpt-dir", d16_straight])
+    fin, step = _leaves_arrays(latest_checkpoint(d16))
+    ref, step_ref = _leaves_arrays(latest_checkpoint(d16_straight))
+    assert step == 6 and step_ref == 6
+    assert len(fin) == len(ref)
+    for i, (a, b) in enumerate(zip(fin, ref)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float64), np.asarray(b, np.float64),
+            rtol=2e-4, atol=1e-5,
+            err_msg=f"leaf {i} diverged beyond round-off across the "
+                    f"16->{dp_new} topology change")

@@ -144,6 +144,52 @@ def test_slot_capacity_overflow_rejected():
         eng.submit(Request(rid=0, tokens=list(range(6)), max_new_tokens=4))
 
 
+def test_deadline_evicts_stalled_request_and_frees_admission():
+    """Per-request TTL: a long request monopolizing the only slot is evicted
+    at its deadline with its partial tokens flagged "timed_out", and the
+    starved queued request then admits — and still matches its solo run."""
+    cfg, api, params = _setup()
+    now = [0.0]
+    eng = ContinuousEngine(api, params, n_slots=1, capacity=64,
+                           clock=lambda: now[0])
+    eng.submit(Request(rid=0, tokens=[1, 2, 3], max_new_tokens=50,
+                       deadline_s=5.0))
+    eng.submit(Request(rid=1, tokens=[9, 8, 7], max_new_tokens=3))
+    for _ in range(4):
+        eng.step()                     # r0 decodes, r1 starves in the queue
+    assert not any(r.rid == 1 for r in eng.results)
+    now[0] = 10.0                      # r0's deadline passes
+    while eng.step():
+        pass
+    res = {r.rid: r for r in eng.results}
+    assert res[0].finished_reason == "timed_out"
+    assert 0 < len(res[0].tokens) < 50          # partial output preserved
+    assert res[0].logprobs and len(res[0].logprobs) == len(res[0].tokens)
+    assert res[1].finished_reason == "length"
+    assert res[1].tokens == _solo(api, params, [9, 8, 7], 3).tokens
+
+
+def test_deadline_expires_queued_request_without_admission():
+    """A request whose TTL lapses while still queued never takes a slot: it
+    returns empty, flagged "timed_out", and in-flight work is unaffected."""
+    cfg, api, params = _setup()
+    now = [0.0]
+    eng = ContinuousEngine(api, params, n_slots=1, capacity=32,
+                           clock=lambda: now[0])
+    eng.submit(Request(rid=0, tokens=[1, 2, 3], max_new_tokens=4))
+    eng.step()                          # r0 holds the slot
+    eng.submit(Request(rid=1, tokens=[4, 5], max_new_tokens=2,
+                       deadline_s=1.0))
+    now[0] = 2.0                        # r1 expires before a slot frees
+    while eng.step():
+        pass
+    res = {r.rid: r for r in eng.results}
+    assert res[1].finished_reason == "timed_out"
+    assert res[1].tokens == [] and res[1].logprobs == []
+    assert res[0].finished_reason == "length"
+    assert res[0].tokens == _solo(api, params, [1, 2, 3], 4).tokens
+
+
 def test_state_arch_rejected_with_shaped_error():
     cfg, api, params = _setup("rwkv6_7b")
     with pytest.raises(ValueError, match="slotted KV serving"):
