@@ -49,6 +49,9 @@ class TrainingRun:
     # bubble model); plain (M, K) keys are accepted as gpipe for back-compat
     pipe_speedup: Dict[Tuple, float] = \
         dataclasses.field(default_factory=dict)
+    # M -> context-parallel SU^M (sequence-sharded KV ring, planner's
+    # cp_step_speedup; empty when the arch has no CP path)
+    cp_speedup: Dict[int, float] = dataclasses.field(default_factory=dict)
     # Measured fraction of the DP gradient exchange hidden under backward
     # compute (comm.MEASURED_OVERLAP keyed by the selected comm runtime: 0
     # for GSPMD's monolithic all-reduce) and the runtime's bucket size (> 0
@@ -94,6 +97,22 @@ def speedup_hybrid(run: TrainingRun, n_workers: int, m: int) -> float:
     su_m = run.mp_speedup.get(m, 0.0) if m > 1 else 1.0
     return (su_m * se(run, n_workers, grad_scale=1.0 / max(m, 1),
                       hybrid=m > 1)
+            * n_workers * epochs_ratio(run, n_workers))
+
+
+def speedup_context(run: TrainingRun, n_workers: int, m: int) -> float:
+    """Eq. 5 with context-parallel workers: N-way DP of M-device KV rings,
+    M*N devices total.  CP REPLICATES the parameters across the ring, so —
+    unlike tensor-MP's 1/M grad discount — every one of the M*N devices
+    all-reduces the FULL gradient (the ring members see different tokens of
+    the same sequences, so their grads must sum): SE is evaluated at M*N
+    workers with grad_scale=1.  CP buys its per-step 1/M at full sync cost,
+    which is exactly why the planner only picks it when the sequence axis
+    is what blows the memory budget."""
+    if m <= 1:
+        return speedup_dp(run, n_workers)
+    su_m = run.cp_speedup.get(m, 0.0)
+    return (su_m * se(run, n_workers * m, grad_scale=1.0, hybrid=True)
             * n_workers * epochs_ratio(run, n_workers))
 
 

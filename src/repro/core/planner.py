@@ -47,10 +47,10 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.analytical import (TrainingRun, speedup_dp, speedup_hybrid,
-                                   speedup_pipeline)
-from repro.core.comm import (HardwareModel, hierarchical_all_reduce_time,
-                             p2p_transfer_time)
+from repro.core.analytical import (TrainingRun, speedup_context, speedup_dp,
+                                   speedup_hybrid, speedup_pipeline)
+from repro.core.comm import (HardwareModel, cp_ring_time,
+                             hierarchical_all_reduce_time, p2p_transfer_time)
 from repro.core.stateff import EpochModel, fit_epoch_model
 from repro.parallel.pipeline import (pipeline_activation_residency,
                                      pipeline_step_speedup)
@@ -65,7 +65,7 @@ class PlannerChoice:
     pods: int
     dp: int                        # per-pod DP degree (N = pods * dp)
     mp: int
-    mp_kind: str                   # "none" | "tensor" | "pipeline"
+    mp_kind: str                   # "none" | "tensor" | "pipeline" | "context"
     microbatches: int              # pipeline micro-batches K (1 otherwise)
     schedule: str                  # pipeline schedule ("-" for non-pipeline)
     virtual_stages: int            # interleaved chunks per device (v)
@@ -185,6 +185,40 @@ def pipeline_step_speedup_model(cfg: ModelConfig, m: int, n_micro: int,
                                  schedule=schedule, virtual_stages=v)
 
 
+def cp_step_speedup(cfg: ModelConfig, m: int, hw: HardwareModel, *,
+                    mini_batch: int = 16, seq_len: int = 4096) -> float:
+    """Context-parallel SU^M on the ppermute KV ring
+    (``parallel.context.ring_attention``): ALL per-token compute scales 1/m
+    — the residual stream is sequence-sharded end to end, so the matmuls
+    split like the tokens do — and on top rides the per-layer ring cost
+    (``core.comm.cp_ring_time``): (m-1) neighbor hops each carrying one
+    sequence shard's bf16 K+V block, forward KV rotation plus the
+    backward's KV + dK/dV rings.  GQA keeps the wire narrow: hop bytes
+    scale with n_kv_heads, not n_heads, which is why CP's ring is so much
+    cheaper than all-gathering KV."""
+    if m <= 1:
+        return 1.0
+    tokens = mini_batch * seq_len
+    flops = 6.0 * cfg.n_active_params() / cfg.n_layers * tokens  # per layer
+    t_layer = flops / (hw.peak_flops * hw.mfu)
+    # one shard's K + V block in bf16: (b, s/m, n_kv_heads, head_dim) x 2
+    hop_bytes = 2.0 * mini_batch * (seq_len / m) * cfg.n_kv_heads \
+        * cfg.head_dim * 2.0
+    t_ring = cp_ring_time(hop_bytes, m, hw)
+    return t_layer / (t_layer / m + t_ring)
+
+
+def context_mp_supported(cfg: ModelConfig) -> bool:
+    """Does the KV-ring context-parallel runtime execute this arch?  The
+    SAME homogeneous-dense-decoder predicate the runtime gates on
+    (``models.transformer.cp_supported``): the overlapped-arch family minus
+    logit softcap (the ring's online-softmax merge has no softcap path)."""
+    from repro.models.transformer import overlapped_arch_supported
+    return (overlapped_arch_supported(cfg)
+            and not getattr(cfg, "attn_logit_softcap", 0.0)
+            and cfg.n_heads > 0)
+
+
 def pipeline_stage_candidates(cfg: ModelConfig,
                               mp_candidates: Tuple[int, ...]) -> Tuple[int, ...]:
     """Stage counts that evenly partition the arch's layer stack(s)."""
@@ -268,7 +302,11 @@ def per_device_mem_bytes(cfg: ModelConfig, *, mp: int = 1,
     planning for it must cost K.
     """
     p = float(cfg.n_params())
-    shard = float(max(mp, 1) * max(fsdp, 1))
+    # context-parallel replicates params/opt/grads across the ring (only
+    # activations shard 1/mp — CP is the axis to buy when the SEQUENCE is
+    # what blows the budget, not the parameters)
+    mp_param_shard = 1.0 if mp_kind == "context" else float(max(mp, 1))
+    shard = mp_param_shard * max(fsdp, 1)
     state = (4.0 + opt_bytes_per_param) * p / shard
     grads = 4.0 * p / shard
     tokens = float(mini_batch) * float(seq_len)
@@ -297,10 +335,14 @@ def default_opt_bytes_per_param(cfg: ModelConfig) -> float:
 
 
 class HybridPlanner:
-    """Unified 4-way search over every (pods, N, M, kind, K, schedule) point
-    of the device budget: DP-only, N-way DP x M-way tensor-MP, and N-way DP
-    x M-stage pipeline-MP with K micro-batches under each feasible pipeline
-    schedule (gpipe / 1f1b / interleaved)."""
+    """Unified search over every (pods, N, M, kind, K, schedule) point of
+    the device budget: DP-only, N-way DP x M-way tensor-MP, N-way DP x
+    M-stage pipeline-MP with K micro-batches under each feasible pipeline
+    schedule (gpipe / 1f1b / interleaved), and N-way DP x M-device
+    **context parallelism** (sequence-sharded ppermute KV rings,
+    ``parallel.context`` — searched where the arch has the CP path and M
+    divides the sequence; params replicated, so its memory filter shards
+    only activations and its SE pays the full-gradient sync)."""
 
     def __init__(self, cfg: ModelConfig, *, epoch_model: EpochModel,
                  mini_batch: int = 16, seq_len: int = 4096,
@@ -350,6 +392,11 @@ class HybridPlanner:
         t1 = step_time_single(cfg, mini_batch, seq_len, hw)
         tensor_ms = (tuple(m for m in mp_candidates if m > 1)
                      if tensor_mp_supported(cfg) else ())
+        # CP's feasibility filter is SEQUENCE divisibility, not heads: the
+        # ring shards the token axis, so m must divide the training seq_len
+        cp_ms = (tuple(m for m in mp_candidates
+                       if m > 1 and seq_len % m == 0)
+                 if context_mp_supported(cfg) else ())
         from repro.core.comm import MEASURED_OVERLAP
         from repro.parallel.collectives import DEFAULT_BUCKET_BYTES
         self.run = TrainingRun(
@@ -359,6 +406,9 @@ class HybridPlanner:
             dataset_size=dataset_tokens // seq_len,
             mp_speedup={m: mp_step_speedup(cfg, m, hw, self.mp_comm_runtime)
                         for m in tensor_ms},
+            cp_speedup={m: cp_step_speedup(cfg, m, hw, mini_batch=mini_batch,
+                                           seq_len=seq_len)
+                        for m in cp_ms},
             hw=hw, se_perfect=se_perfect,
             comm_overlap=MEASURED_OVERLAP[comm_runtime],
             bucket_bytes=(DEFAULT_BUCKET_BYTES
@@ -387,6 +437,8 @@ class HybridPlanner:
             else:
                 if m in self.run.mp_speedup:
                     kinds.append(("tensor", 1, "-", 1))
+                if m in self.run.cp_speedup:
+                    kinds.append(("context", 1, "-", 1))
                 if m in self.pipe_candidates:
                     kinds.extend(
                         ("pipeline", k, sched, v)
@@ -409,8 +461,10 @@ class HybridPlanner:
     def _evaluate(self, total: int, n: int, m: int, kind: str, n_micro: int,
                   sched: str = "-", v: int = 1) -> Optional[PlannerChoice]:
         pipe = kind == "pipeline"
+        ctx = kind == "context"
+        mp_kind = "pipeline" if pipe else ("context" if ctx else "tensor")
         mem_kw = dict(
-            mp=m, mp_kind="pipeline" if pipe else "tensor",
+            mp=m, mp_kind=mp_kind,
             mini_batch=self.mini_batch, seq_len=self.seq_len,
             opt_bytes_per_param=self.opt_bytes_per_param, remat=self.remat,
             microbatches=n_micro if pipe else 1,
@@ -427,6 +481,9 @@ class HybridPlanner:
         if pipe:
             su = speedup_pipeline(self.run, n, m, n_micro, sched)
             su_m = self.run.pipe_speedup.get((m, n_micro, sched), 0.0)
+        elif ctx:
+            su = speedup_context(self.run, n, m)
+            su_m = self.run.cp_speedup.get(m, 0.0)
         elif kind == "tensor":
             su = speedup_hybrid(self.run, n, m)
             su_m = self.run.mp_speedup.get(m, 1.0)
@@ -438,8 +495,9 @@ class HybridPlanner:
         # stamp each plan with the comm runtime that will actually carry it:
         # pure-DP points get the (arch-independent) bucketed sync, tensor
         # points the matmul rings iff the arch has the overlapped path,
-        # pipeline points their own ppermute rings (comm_runtime inert)
-        if pipe:
+        # pipeline/context points their own ppermute rings (comm_runtime
+        # inert for pipeline; the KV ring IS context's comm schedule)
+        if pipe or ctx:
             point_comm = "gspmd"
         elif m > 1:
             point_comm = self.mp_comm_runtime
@@ -449,7 +507,7 @@ class HybridPlanner:
             dp_axes=dp_axes,
             model_axis="model" if m > 1 else None,
             fsdp_axes=dp_axes if fsdp else (),
-            mp_kind="pipeline" if pipe else "tensor",
+            mp_kind=mp_kind,
             microbatches=n_micro if pipe else 1,
             schedule=sched if pipe else "gpipe",
             virtual_stages=v if pipe else 1,
@@ -462,7 +520,8 @@ class HybridPlanner:
             microbatches=n_micro if pipe else 1,
             schedule=sched if pipe else "-",
             virtual_stages=v if pipe else 1,
-            speedup=su, su_m=su_m, se_n=self._se(n, m),
+            speedup=su, su_m=su_m,
+            se_n=self._se(n, m, context=ctx),
             epochs_ratio=self._eratio(n), mem_bytes=mem,
             mesh_shape=mesh_shape, plan=plan)
 
@@ -480,8 +539,12 @@ class HybridPlanner:
                 f"GiB/device)")
         return cs[0]
 
-    def _se(self, n: int, m: int = 1) -> float:
+    def _se(self, n: int, m: int = 1, context: bool = False) -> float:
         from repro.core.analytical import se
+        if context:
+            # params replicated across the ring: full grad bytes over all
+            # n*m devices (speedup_context uses the same evaluation)
+            return se(self.run, n * m, grad_scale=1.0, hybrid=True)
         return se(self.run, n, grad_scale=1.0 / max(m, 1), hybrid=m > 1)
 
     def _eratio(self, n: int) -> float:

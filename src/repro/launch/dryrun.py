@@ -47,7 +47,8 @@ ADAFACTOR_ARCHS = {"kimi_k2_1t_a32b", "nemotron_4_340b"}
 def make_plan(arch: str, mesh, plan_name: str, schedule: str = "gpipe",
               pipe_runtime: str = "scheduled",
               comm_runtime: str = "gspmd",
-              comm_chunks: int = 1) -> ParallelPlan:
+              comm_chunks: int = 1,
+              context_parallel: bool = False) -> ParallelPlan:
     multi = "pod" in mesh.axis_names
     dp_axes = ("pod", "data") if multi else ("data",)
     fsdp = dp_axes if (plan_name == "optimized" or arch in ADAFACTOR_ARCHS) else ()
@@ -64,6 +65,13 @@ def make_plan(arch: str, mesh, plan_name: str, schedule: str = "gpipe",
                             virtual_stages=2 if schedule == "interleaved" else 1,
                             runtime=pipe_runtime,
                             fsdp_axes=tuple(fsdp))
+    if context_parallel:
+        # model axis carries the sequence-sharded KV ring (parallel.context):
+        # params replicated across it, activations 1/16 per device — the
+        # long-context training lane (train shapes only; decode keeps its
+        # dense cache attention)
+        return ParallelPlan(dp_axes=dp_axes, model_axis="model",
+                            mp_kind="context", fsdp_axes=tuple(fsdp))
     return ParallelPlan(dp_axes=dp_axes, fsdp_axes=tuple(fsdp),
                         comm_runtime=comm_runtime, comm_chunks=comm_chunks)
 
@@ -166,7 +174,8 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
                   plan_name: str = "baseline", skip_analysis: bool = False,
                   unroll_analysis: bool = True, schedule: str = "gpipe",
                   pipe_runtime: str = "scheduled",
-                  comm_runtime: str = "gspmd", comm_chunks: int = 1):
+                  comm_runtime: str = "gspmd", comm_chunks: int = 1,
+                  context_parallel: bool = False):
     """Run the dry-run for one (arch, shape, mesh) and return the record."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -174,7 +183,7 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
     chips = mesh.size
     plan = make_plan(arch, mesh, plan_name, schedule=schedule,
                      pipe_runtime=pipe_runtime, comm_runtime=comm_runtime,
-                     comm_chunks=comm_chunks)
+                     comm_chunks=comm_chunks, context_parallel=context_parallel)
     if comm_runtime != "gspmd":
         rec_comm = {"comm_runtime": comm_runtime, "comm_chunks": comm_chunks}
         print(f"  [comm] runtime={comm_runtime} chunks={comm_chunks}",
@@ -185,9 +194,13 @@ def analyze_combo(arch: str, shape_name: str, *, multi_pod: bool,
         # the 1-/2-layer unroll artifacts cannot be partitioned into the
         # 16-stage pipeline; per-layer cost deltas are tensor-plan-only
         skip_analysis = True
+    if plan.is_context:
+        t_full = _specs_seqlen(make_input_specs(cfg, shape))
+        print(f"  [ctx] 16-way kv ring, seq {t_full} -> "
+              f"{t_full // 16} per device", flush=True)
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-           "plan": plan_name,
+           "plan": plan_name + ("__cp" if plan.is_context else ""),
            "plan_detail": plan.describe(mesh)}
     if rec_comm:
         rec["comm"] = rec_comm
@@ -303,6 +316,11 @@ def main():
     ap.add_argument("--comm-chunks", type=int, default=1,
                     help="ring chunks per shard for --comm-runtime "
                          "overlapped")
+    ap.add_argument("--context-parallel", action="store_true",
+                    help="swap the tensor shards for a 16-way KV ring "
+                         "(mp_kind='context'): sequence sharded over the "
+                         "model axis, weights replicated; train shapes "
+                         "whose seq divides by 16 only")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-analysis", action="store_true")
     args = ap.parse_args()
@@ -326,6 +344,18 @@ def main():
     if args.comm_chunks != 1 and args.comm_runtime != "overlapped":
         raise SystemExit("[plan] --comm-chunks only applies with "
                          "--comm-runtime overlapped")
+    if args.context_parallel:
+        # context is its own model-axis scheme: it replaces the tensor
+        # shards and already schedules its own KV ring (plan.__post_init__
+        # rejects the overlapped-collectives combination too)
+        if args.plan == "pipeline":
+            raise SystemExit("[plan] --context-parallel replaces the model "
+                             "axis' tensor shards; it cannot combine with "
+                             "--plan pipeline")
+        if args.comm_runtime is not None or args.comm_chunks != 1:
+            raise SystemExit("[plan] --comm-runtime/--comm-chunks apply to "
+                             "the tensor-MP plans; the context plan's KV "
+                             "ring schedules its own ppermute collectives")
     sched = args.sched or "gpipe"
     pipe_runtime = args.pipe_runtime or "scheduled"
     comm_runtime = args.comm_runtime or "gspmd"
@@ -349,7 +379,20 @@ def main():
                             or not pipeline_applicable(get_config(arch), 16, v)):
                         print(f"[skip] {arch}__{shape} (pipeline n/a)")
                         continue
+                if args.context_parallel:
+                    # the KV ring shards the sequence 16 ways and only
+                    # engages on the train path (decode shapes keep their
+                    # dense cache attention)
+                    sh = INPUT_SHAPES[shape]
+                    cfg_a = get_config(arch)
+                    seq = make_input_specs(cfg_a, sh)["tokens"].shape[1]
+                    if sh.kind != "train" or seq % 16:
+                        print(f"[skip] {arch}__{shape} (context n/a: "
+                              f"kind={sh.kind} seq={seq})")
+                        continue
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}__{args.plan}"
+                if args.context_parallel:
+                    tag += "__cp"
                 if comm_runtime != "gspmd":
                     tag += f"__{comm_runtime}"
                 out_path = os.path.join(args.out, tag + ".json")
@@ -366,7 +409,8 @@ def main():
                                         schedule=sched,
                                         pipe_runtime=pipe_runtime,
                                         comm_runtime=comm_runtime,
-                                        comm_chunks=args.comm_chunks)
+                                        comm_chunks=args.comm_chunks,
+                                        context_parallel=args.context_parallel)
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)
                     r = rec["roofline"]

@@ -9,6 +9,8 @@
         --reduced
     python -m repro.launch.train --arch llama3_2_1b --parallel dp=2,mp=2 \
         --reduced --comm-runtime overlapped --comm-chunks 2
+    python -m repro.launch.train --arch llama3_2_1b --parallel dp=2,cp=4 \
+        --reduced --seq 64          # context parallelism: ppermute KV ring
 
 ``--parallel auto`` invokes the paper's HybridPlanner — the unified search
 over DP x tensor-MP x pipeline-MP x schedule factorizations of the device
@@ -19,8 +21,11 @@ carries as much of the projected DP degree as the local machine affords
 (capped by ``--max-local-devices``, default 8, on CPU), with the batch
 sharded over it and the gradient all-reduce inserted by GSPMD.  On CPU the
 launcher forces dp*stages host devices before jax initializes.  Explicit
-``dp=/mp=/accum=`` or ``pipe=/micro=/sched=/v=/dp=`` specs override the
-search.  ``--reduced`` shrinks the arch (2 layers, small dims) for the CPU
+``dp=/mp=/accum=``, ``pipe=/micro=/sched=/v=/dp=``, or ``dp=/cp=`` specs
+override the search (``cp=`` = context parallelism: the model axis carries
+the sequence-sharded ppermute KV ring of ``parallel.context`` with params
+replicated across it; ``--context-parallel`` restricts ``auto`` to those
+points).  ``--reduced`` shrinks the arch (2 layers, small dims) for the CPU
 container.
 
 Tensor-MP and multi-DP plans likewise execute on a real local dp x mp mesh
@@ -54,7 +59,8 @@ from repro.core.planner import HybridPlanner, default_epoch_model
 from repro.parallel.plan import ParallelPlan
 
 
-def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd"):
+def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd",
+                   context_parallel: bool = False):
     """Resolve a --parallel spec to (plan, mp_degree, dp_hint).
 
     ``dp_hint`` is the projected DP degree the launcher should realize (the
@@ -63,6 +69,9 @@ def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd"):
     so the launcher can still force host devices afterwards for pipeline
     execution.  ``comm_runtime`` keys the auto search's overlap terms (the
     planner stamps each point with the runtime that will actually carry it).
+    ``context_parallel`` restricts the auto search to context-parallel
+    points (sequence-sharded KV rings) and reinterprets an explicit ``mp=``
+    degree as the ring size; ``cp=N`` in the spec selects it directly.
     """
     from repro.models.api import supports_pipeline
 
@@ -70,6 +79,13 @@ def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd"):
         planner = HybridPlanner(cfg, epoch_model=default_epoch_model(cfg),
                                 comm_runtime=comm_runtime)
         choices = planner.choices(devices)
+        if context_parallel:
+            choices = [c for c in choices if c.mp_kind == "context"]
+            if not choices:
+                raise SystemExit(
+                    f"[planner] no memory-feasible context-parallel strategy "
+                    f"for {cfg.name} at {devices} devices (needs the dense "
+                    f"decoder CP path and a ring that divides the sequence)")
         if not choices:
             raise SystemExit(f"[planner] no memory-feasible strategy for "
                              f"{cfg.name} at {devices} devices")
@@ -89,6 +105,18 @@ def parse_parallel(spec: str, devices: int, cfg, comm_runtime: str = "gspmd"):
         return choice.plan, choice.mp, choice.pods * choice.dp
     kv = dict(p.split("=") for p in spec.split(","))
     pipe = int(kv.get("pipe", 0))
+    cp = int(kv.get("cp", 0))
+    if context_parallel and cp <= 1:
+        cp = int(kv.pop("mp", 0))         # --context-parallel: mp= is the ring
+    if cp > 1:
+        if pipe > 1 or int(kv.get("mp", 1)) > 1:
+            raise SystemExit(
+                "[plan] cp= is its own model axis: it cannot combine with "
+                "mp= (tensor) or pipe= (pipeline) in one spec")
+        plan = ParallelPlan(dp_axes=("data",), model_axis="model",
+                            mp_kind="context",
+                            microbatches=int(kv.get("accum", 1)))
+        return plan, cp, int(kv.get("dp", 1))
     if pipe > 1:
         sched = kv.get("sched", "gpipe")
         v = int(kv.get("v", 2 if sched == "interleaved" else 1))
@@ -122,7 +150,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--parallel", default="dp=1,mp=1")
+    ap.add_argument("--parallel", default="",
+                    help="'auto', 'dp=2,mp=2', 'pipe=2,micro=4', "
+                         "'dp=2,cp=4', ... (default: dp=1,mp=1 — except "
+                         "with --resume, where an empty spec re-runs the "
+                         "planner for the CURRENT device count: an elastic "
+                         "grow/shrink resume must not need the old spec "
+                         "replayed)")
     ap.add_argument("--devices", type=int, default=0,
                     help="planner device budget for --parallel auto "
                          "(default: 256, the single-pod production budget)")
@@ -186,6 +220,13 @@ def main():
                     help="ring chunks per shard for --comm-runtime "
                          "overlapped (default 1; more chunks = finer "
                          "overlap, more per-hop latency)")
+    ap.add_argument("--context-parallel", action="store_true",
+                    help="context parallelism: shard the SEQUENCE axis over "
+                         "the model axis and run attention as a ppermute KV "
+                         "ring (parallel.context); with --parallel auto "
+                         "restricts the search to context plans, with an "
+                         "explicit spec reinterprets mp= as the ring size "
+                         "(or use --parallel dp=2,cp=4 directly)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -199,10 +240,35 @@ def main():
                          f"benchmarks/fig4_epochs.py")
     if args.resume and not args.ckpt_dir:
         raise SystemExit("[resume] --resume needs --ckpt-dir")
+    spec = args.parallel
     budget = args.devices or 256
-    plan, mp, dp_hint = parse_parallel(args.parallel, budget, cfg,
+    if spec == "auto" and args.resume:
+        # elastic resume replan: the checkpoint stores global leaves and
+        # re-shards onto whatever mesh this process has, so the PLAN comes
+        # from the planner at the CURRENT local device budget — the old
+        # run's --parallel spec never needs replaying after a grow/shrink
+        budget = args.devices or args.max_local_devices
+        print(f"[plan] --parallel auto with --resume: re-running the "
+              f"planner for the current {budget}-device budget")
+    if not spec:
+        # a bare --resume keeps the same default plan a fresh run gets:
+        # same-topology kill/resume must stay bit-reproducible (pinned in
+        # tests/test_fault.py) — elastic replanning is an explicit opt-in
+        # via --parallel auto
+        spec = "dp=1,mp=1"
+    plan, mp, dp_hint = parse_parallel(spec, budget, cfg,
                                        comm_runtime=args.comm_runtime
-                                       or "gspmd")
+                                       or "gspmd",
+                                       context_parallel=args.context_parallel)
+    if plan.mp_kind == "context" and mp > 1:
+        if args.seq % mp:
+            raise SystemExit(
+                f"[plan] context parallelism shards the sequence: --seq "
+                f"({args.seq}) must divide by the {mp}-way ring")
+        if args.comm_runtime == "overlapped" or args.comm_chunks:
+            raise SystemExit(
+                "[plan] --comm-runtime/--comm-chunks do not apply to "
+                "context-parallel plans (the KV ring IS the comm schedule)")
     if args.pipe_runtime:
         if not plan.is_pipeline:
             raise SystemExit("[plan] --pipe-runtime only applies to pipeline "
@@ -215,7 +281,7 @@ def main():
             raise SystemExit("[plan] --comm-chunks only applies with "
                              "--comm-runtime overlapped")
         if plan.is_pipeline and mp > 1:
-            if args.parallel != "auto":
+            if spec != "auto":
                 raise SystemExit(
                     "[plan] --comm-runtime/--comm-chunks apply to tensor-MP "
                     "/ DP plans; pipeline stages exchange activations over "
@@ -228,7 +294,7 @@ def main():
             # (gspmd for archs the overlapped runtime cannot execute)
             plan = dataclasses.replace(
                 plan,
-                comm_runtime=(plan.comm_runtime if args.parallel == "auto"
+                comm_runtime=(plan.comm_runtime if spec == "auto"
                               else (args.comm_runtime or plan.comm_runtime)),
                 comm_chunks=args.comm_chunks or plan.comm_chunks)
 

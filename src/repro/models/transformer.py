@@ -45,6 +45,11 @@ class ParallelCtx:
     # them through parallel.collectives' chunked ppermute rings
     comm_runtime: str = "gspmd"
     comm_chunks: int = 1              # ring chunks per shard (overlapped)
+    # context parallelism: the mesh axis carrying the sequence-sharded KV
+    # ring (parallel.context).  CP shards the sequence, not the weights, so
+    # it is mutually exclusive with tensor-MP compute — the model axis hosts
+    # the ring and every parameter stays replicated across it.
+    context_axis: Optional[str] = None
 
     @property
     def ep(self) -> bool:
@@ -597,6 +602,73 @@ def overlapped_block_apply(cfg, p, x, *, window: int,
 
 
 # ---------------------------------------------------------------------------
+# context-parallel block (sequence-sharded ring attention)
+# ---------------------------------------------------------------------------
+
+def cp_supported(cfg, pctx: Optional[ParallelCtx], t: int) -> bool:
+    """Can this (arch, mesh, shape) run context-parallel ring attention?
+    Requires a homogeneous dense decoder (same predicate as the overlapped
+    runtime — ``overlapped_arch_supported``), no logit softcap (the ring's
+    online-softmax fold has no capped variant), and the sequence divisible
+    by the ring size so the residual stream stays sequence-sharded between
+    blocks.  Anything else falls back to GSPMD."""
+    if pctx is None or pctx.context_axis is None or pctx.mesh is None:
+        return False
+    csz = pctx.mesh.shape[pctx.context_axis]
+    if csz <= 1:
+        return False
+    if not overlapped_arch_supported(cfg) or cfg.attn_logit_softcap:
+        return False
+    return cfg.n_heads > 0 and t % csz == 0
+
+
+def cp_block_apply(cfg, p, x, *, window: int, pctx: ParallelCtx):
+    """One dense decoder block with the residual stream SEQUENCE-sharded
+    over the context axis and attention on the KV ppermute ring
+    (``parallel.context.ring_attention``).  Unlike the tensor-MP overlapped
+    block, every weight stays fully replicated across the ring — CP shards
+    the sequence, not the parameters — so qkv/wo/MLP are plain local
+    matmuls over this device's T/m rows and the ONLY communication in the
+    compiled block is the ring's collective-permutes (fwd and bwd; HLO
+    asserted in tests).  ``x`` enters and leaves (B, T, d) GSPMD-global,
+    sharded P(batch, context, None)."""
+    from repro.parallel.context import ring_attention
+    mesh, axis = pctx.mesh, pctx.context_axis
+    csz = mesh.shape[axis]
+    baxes = tuple(a for a in pctx.batch_axes if a)
+    bspec = baxes if (baxes and _batch_div(x.shape[0], pctx, baxes)) else None
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t_loc = x.shape[1] // csz
+
+    def local(lp, xl):
+        b = xl.shape[0]
+        h = L.rms_norm(xl, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["attn"]["wq"].astype(h.dtype)).reshape(b, t_loc, nh, hd)
+        k = (h @ lp["attn"]["wk"].astype(h.dtype)).reshape(b, t_loc, nkv, hd)
+        v = (h @ lp["attn"]["wv"].astype(h.dtype)).reshape(b, t_loc, nkv, hd)
+        j = jax.lax.axis_index(axis)
+        positions = jnp.broadcast_to(j * t_loc + jnp.arange(t_loc),
+                                     (b, t_loc))
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        out = ring_attention(q, k, v, axis=axis, axis_size=csz,
+                             causal=True, window=window)
+        xl = xl + (out.reshape(b, t_loc, nh * hd)
+                   @ lp["attn"]["wo"].astype(xl.dtype))
+        h2 = L.rms_norm(xl, lp["ln2"], cfg.norm_eps)
+        return xl + L.mlp_apply(lp["mlp"], h2, cfg.mlp_kind)
+
+    rp, rw = P(None), P(None, None)
+    p_specs = {"ln1": rp, "ln2": rp,
+               "attn": {k: rw for k in p["attn"]},
+               "mlp": {k: rw for k in p["mlp"]}}
+    sub = {k: p[k] for k in ("ln1", "ln2", "attn", "mlp")}
+    xspec = P(bspec, axis, None)
+    return shard_map(local, mesh=mesh, in_specs=(p_specs, xspec),
+                     out_specs=xspec)(sub, x)
+
+
+# ---------------------------------------------------------------------------
 # encoder (whisper)
 # ---------------------------------------------------------------------------
 
@@ -672,6 +744,18 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
 
     overlapped = (not prefill
                   and overlapped_supported(cfg, pctx, x.shape[1]))
+    cp = (not prefill and not overlapped
+          and cp_supported(cfg, pctx, x.shape[1]))
+    if (not cp and not prefill and pctx is not None
+            and pctx.context_axis is not None and pctx.mesh is not None
+            and pctx.mesh.shape[pctx.context_axis] > 1):
+        # same perf-cliff visibility rule as the overlapped fallback below
+        cpn = pctx.mesh.shape[pctx.context_axis]
+        warnings.warn(
+            f"[context] {cfg.name}: context parallelism requested but the "
+            f"KV ring cannot engage (needs a homogeneous dense decoder "
+            f"without logit softcap and seq ({x.shape[1]}) % {cpn} == 0); "
+            f"falling back to GSPMD's gathered attention", stacklevel=2)
     if (not overlapped and not prefill and pctx is not None
             and pctx.comm_runtime == "overlapped"
             and pctx.mesh is not None and pctx.model_axis is not None
@@ -696,6 +780,9 @@ def forward(cfg, params, batch, *, mode: str = "train", window_override=None,
             lp, csl = lp_and_cache, None
         if overlapped:
             x = overlapped_block_apply(cfg, lp, x, window=window, pctx=pctx)
+            return (x, aux), 0
+        if cp:
+            x = cp_block_apply(cfg, lp, x, window=window, pctx=pctx)
             return (x, aux), 0
         x, c_new, a = block_apply(cfg, lp, x, mode="prefill" if prefill else "train",
                                   window=window, pos0=0, cache=csl,
@@ -930,4 +1017,236 @@ def decode_slots_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
         out_specs=(P(bspec, None, None), {"k": c_spec, "v": c_spec}))(
             params, layer_caches, tokens, pos)
     new_caches["pos"] = pos + 1
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# sharded chunked prefill (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_tp_supported(cfg, mesh, model_axis, t: int,
+                               chunks: int = 1) -> bool:
+    """Can one slot's prefill chunk run on the collective-matmul rings?
+    The chunk's SEQUENCE dim takes the ring-row role (exactly training's
+    ``overlapped_supported`` conditions, with t = the chunk length)."""
+    if mesh is None or model_axis is None:
+        return False
+    msz = mesh.shape[model_axis]
+    if msz <= 1 or not overlapped_arch_supported(cfg):
+        return False
+    return (cfg.n_heads > 0 and cfg.n_heads % msz == 0
+            and cfg.d_ff % msz == 0 and t % msz == 0
+            and (t // msz) % max(chunks, 1) == 0)
+
+
+def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
+                     comm_chunks: int = 1, window_override=None):
+    """Chunked-prefill "extend" step for ONE slot under the tensor-MP mesh:
+    the whole layer stack in one shard_map with every Megatron matmul on
+    the chunked collective-matmul rings — the same schedule as training's
+    ``overlapped_block_apply`` (residual stream chunk-sequence-sharded,
+    qkv gather ring -> slot-mode attention against the cache -> wo reduce
+    ring -> MLP rings), against the slot's extracted batch-1 cache.
+
+    ``cache``: ``models.api.cache_extract_slot`` shape — per-layer k/v
+    (Lc, 1, capacity, KV, hd) + ``pos`` (1,); batch: dict(tokens (1, t)).
+    Returns (last-token logits (1, 1, V), new slot cache)."""
+    from repro.parallel.collectives import (all_gather_matmul,
+                                            matmul_reduce_scatter,
+                                            ring_all_gather)
+    window = cfg.sliding_window if window_override is None else window_override
+    tokens = batch["tokens"]
+    pos = cache["pos"]
+    b, t = tokens.shape
+    msz = mesh.shape[model_axis]
+    t_loc = t // msz
+    chunks = max(comm_chunks, 1)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hpm = nh // msz
+    kv_sharded = nkv % msz == 0
+    kvpm = nkv // msz if kv_sharded else nkv
+    kw = dict(axis=model_axis, axis_size=msz, chunks=chunks)
+
+    def local(p, layer_caches, tok, ps):
+        x = _embed(cfg, p, tok)                           # (1, t, d)
+        j = jax.lax.axis_index(model_axis)
+        xl = jax.lax.dynamic_slice_in_dim(x, j * t_loc, t_loc, axis=1)
+        clen = layer_caches["k"].shape[2]
+        slot = jnp.arange(clen + t)
+        in_cache = slot < clen
+        qpos = ps[:, None] + jnp.arange(t)[None]          # (1, t)
+        kpos = jnp.where(in_cache[None], slot[None],
+                         ps[:, None] + (slot[None] - clen))
+        valid = jnp.where(in_cache[None, None],
+                          slot[None, None, :] < ps[:, None, None],
+                          kpos[:, None, :] <= qpos[:, :, None])
+        if window:
+            valid &= kpos[:, None, :] > qpos[:, :, None] - window
+
+        def body(xl, lp_cache):
+            lp, csl = lp_cache
+            h = L.rms_norm(xl, lp["ln1"], cfg.norm_eps)
+            w_qkv = jnp.concatenate(
+                [lp["attn"]["wq"], lp["attn"]["wk"], lp["attn"]["wv"]],
+                axis=1).astype(xl.dtype)
+            qkv = all_gather_matmul(h, w_qkv, **kw)       # (1, t, ...)
+            q = qkv[..., :hpm * hd].reshape(b, t, hpm, hd)
+            k = qkv[..., hpm * hd:(hpm + kvpm) * hd].reshape(b, t, kvpm, hd)
+            v = qkv[..., (hpm + kvpm) * hd:].reshape(b, t, kvpm, hd)
+            q = L.apply_rope(q, qpos, cfg.rope_theta)
+            k = L.apply_rope(k, qpos, cfg.rope_theta)
+            k_all = jnp.concatenate([csl["k"], k], axis=1)
+            v_all = jnp.concatenate([csl["v"], v], axis=1)
+            if kv_sharded:
+                k_att, v_att = k_all, v_all
+            else:
+                k_att = jax.lax.dynamic_slice_in_dim(
+                    L.repeat_kv(k_all, nh // nkv), j * hpm, hpm, axis=2)
+                v_att = jax.lax.dynamic_slice_in_dim(
+                    L.repeat_kv(v_all, nh // nkv), j * hpm, hpm, axis=2)
+            out = L.attention(q, k_att, v_att, mask=valid,
+                              softcap=cfg.attn_logit_softcap)
+            xl = xl + matmul_reduce_scatter(
+                out.reshape(b, t, hpm * hd),
+                lp["attn"]["wo"].astype(xl.dtype), **kw)
+            h2 = L.rms_norm(xl, lp["ln2"], cfg.norm_eps)
+            xl = xl + L.mlp_apply_overlapped(lp["mlp"], h2, cfg.mlp_kind,
+                                             axis=model_axis, axis_size=msz,
+                                             chunks=chunks)
+            kv = L.cache_insert_at({"k": csl["k"], "v": csl["v"]}, k, v, ps)
+            return xl, kv
+
+        xl, new_caches = jax.lax.scan(
+            body, xl, (p["layers"], layer_caches),
+            unroll=cfg.n_layers if L.analysis_unroll() else 1)
+        x_full = ring_all_gather(xl, **kw)                # (1, t, d)
+        logits = _head(cfg, p, x_full[:, -1:])            # (1, 1, V)
+        return logits, new_caches
+
+    col, row = P(None, None, model_axis), P(None, model_axis, None)
+    kvw = col if kv_sharded else P(None, None, None)
+    p_specs = {"embed": P(None, None), "final_norm": P(None),
+               "layers": {"ln1": P(None, None), "ln2": P(None, None),
+                          "attn": {"wq": col, "wk": kvw, "wv": kvw,
+                                   "wo": row},
+                          "mlp": {k: (row if k == "wo" else col)
+                                  for k in params["layers"]["mlp"]}}}
+    if "lm_head" in params:
+        p_specs["lm_head"] = P(None, None)
+    kvm = model_axis if kv_sharded else None
+    c_spec = P(None, None, None, kvm, None)
+    layer_caches = {"k": cache["k"], "v": cache["v"]}
+    logits, new_caches = shard_map(
+        local, mesh=mesh,
+        in_specs=(p_specs, {"k": c_spec, "v": c_spec},
+                  P(None, None), P(None)),
+        out_specs=(P(None, None, None), {"k": c_spec, "v": c_spec}))(
+            params, layer_caches, tokens, pos)
+    new_caches["pos"] = pos + t
+    return logits, new_caches
+
+
+def prefill_chunk_cp_supported(cfg, mesh, context_axis, t: int) -> bool:
+    """Can one slot's prefill chunk run context-parallel?  Mirrors
+    ``cp_supported`` with t = the chunk length; no head-divisibility
+    constraint — CP shards the sequence, not the heads."""
+    if mesh is None or context_axis is None:
+        return False
+    csz = mesh.shape[context_axis]
+    if csz <= 1 or not overlapped_arch_supported(cfg) \
+            or cfg.attn_logit_softcap:
+        return False
+    return cfg.n_heads > 0 and t % csz == 0
+
+
+def prefill_chunk_cp(cfg, params, cache, batch, *, mesh, context_axis: str,
+                     window_override=None):
+    """Chunked-prefill "extend" step for ONE slot with the chunk
+    CONTEXT-PARALLEL: the chunk's sequence dim shards over the ring,
+    in-chunk attention rides ``parallel.context.ring_attention_stats``
+    (per-request absolute offsets cancel in the causal/window masks), the
+    KV-cache contribution is computed locally per device against the
+    replicated slot cache and merged via ``merge_softmax_stats``, and the
+    chunk's new KV rows reassemble on a ``ring_all_gather`` (ppermute-only)
+    for the replicated cache insert.  Weights stay fully replicated.
+
+    Same signature/shapes as ``prefill_chunk_tp``."""
+    from repro.parallel.collectives import ring_all_gather
+    from repro.parallel.context import ring_attention_stats
+    window = cfg.sliding_window if window_override is None else window_override
+    tokens = batch["tokens"]
+    pos = cache["pos"]
+    b, t = tokens.shape
+    csz = mesh.shape[context_axis]
+    t_loc = t // csz
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n_rep = nh // nkv
+    scale = 1.0 / (hd ** 0.5)
+    gkw = dict(axis=context_axis, axis_size=csz)
+
+    def local(p, layer_caches, tok, ps):
+        x = _embed(cfg, p, tok)                           # (1, t, d)
+        j = jax.lax.axis_index(context_axis)
+        xl = jax.lax.dynamic_slice_in_dim(x, j * t_loc, t_loc, axis=1)
+        clen = layer_caches["k"].shape[2]
+        slot = jnp.arange(clen)                           # cache kpos == slot
+        qpos = ps[:, None] + j * t_loc + jnp.arange(t_loc)[None]  # (1, t_loc)
+        valid = jnp.broadcast_to(slot[None, None, :] < ps[:, None, None],
+                                 (b, t_loc, clen))
+        if window:
+            valid = valid & (slot[None, None, :] > qpos[:, :, None] - window)
+
+        def body(xl, lp_cache):
+            lp, csl = lp_cache
+            h = L.rms_norm(xl, lp["ln1"], cfg.norm_eps)
+            q = (h @ lp["attn"]["wq"].astype(h.dtype)).reshape(b, t_loc, nh, hd)
+            k = (h @ lp["attn"]["wk"].astype(h.dtype)).reshape(b, t_loc, nkv, hd)
+            v = (h @ lp["attn"]["wv"].astype(h.dtype)).reshape(b, t_loc, nkv, hd)
+            q = L.apply_rope(q, qpos, cfg.rope_theta)
+            k = L.apply_rope(k, qpos, cfg.rope_theta)
+            ring_stats = ring_attention_stats(q, k, v, causal=True,
+                                              window=window, **gkw)
+            # cache contribution: local dense partial over the replicated
+            # slot cache; a fully-masked row's bogus exp(0) probs are
+            # zeroed by the merge's corr factor (m stays NEG_INF)
+            kr = L.repeat_kv(csl["k"], n_rep).astype(jnp.float32)
+            vr = L.repeat_kv(csl["v"], n_rep).astype(jnp.float32)
+            q32 = q.astype(jnp.float32).transpose(0, 2, 1, 3) * scale
+            sc = jnp.einsum("bhqd,bkhd->bhqk", q32, kr)
+            sc = jnp.where(valid[:, None], sc, L.NEG_INF)
+            mk = sc.max(axis=-1)
+            pk = jnp.exp(sc - mk[..., None])
+            cache_stats = (mk, pk.sum(axis=-1),
+                           jnp.einsum("bhqk,bkhd->bhqd", pk, vr))
+            m, l, acc = L.merge_softmax_stats(ring_stats, cache_stats)
+            out = (acc / jnp.maximum(l, 1e-30)[..., None]
+                   ).transpose(0, 2, 1, 3).astype(xl.dtype)
+            xl = xl + (out.reshape(b, t_loc, nh * hd)
+                       @ lp["attn"]["wo"].astype(xl.dtype))
+            h2 = L.rms_norm(xl, lp["ln2"], cfg.norm_eps)
+            xl = xl + L.mlp_apply(lp["mlp"], h2, cfg.mlp_kind)
+            kf = ring_all_gather(k.reshape(b, t_loc, nkv * hd), **gkw
+                                 ).reshape(b, t, nkv, hd)
+            vf = ring_all_gather(v.reshape(b, t_loc, nkv * hd), **gkw
+                                 ).reshape(b, t, nkv, hd)
+            kv = L.cache_insert_at({"k": csl["k"], "v": csl["v"]}, kf, vf, ps)
+            return xl, kv
+
+        xl, new_caches = jax.lax.scan(
+            body, xl, (p["layers"], layer_caches),
+            unroll=cfg.n_layers if L.analysis_unroll() else 1)
+        x_full = ring_all_gather(xl, **gkw)               # (1, t, d)
+        logits = _head(cfg, p, x_full[:, -1:])            # (1, 1, V)
+        return logits, new_caches
+
+    p_specs = jax.tree.map(lambda a: P(*(None,) * jnp.ndim(a)), params)
+    c_spec = P(None, None, None, None, None)
+    layer_caches = {"k": cache["k"], "v": cache["v"]}
+    logits, new_caches = shard_map(
+        local, mesh=mesh,
+        in_specs=(p_specs, {"k": c_spec, "v": c_spec},
+                  P(None, None), P(None)),
+        out_specs=(P(None, None, None), {"k": c_spec, "v": c_spec}))(
+            params, layer_caches, tokens, pos)
+    new_caches["pos"] = pos + t
     return logits, new_caches

@@ -20,7 +20,14 @@ class ParallelPlan:
     dp_axes: Tuple[str, ...] = ("data",)   # batch sharded over these (paper's N)
     model_axis: Optional[str] = "model"    # tensor/pipeline MP axis (paper's M)
     fsdp_axes: Tuple[str, ...] = ()        # params/opt additionally sharded here
-    mp_kind: str = "tensor"                # "tensor" | "pipeline"
+    # "tensor": Megatron head/FFN sharding over model_axis.
+    # "pipeline": model_axis carries pipeline stages.
+    # "context": model_axis carries the sequence-sharded KV ring
+    #   (parallel.context) — params stay REPLICATED across it; the residual
+    #   stream is sequence-sharded and attention rotates KV on a ppermute
+    #   ring.  Mutually exclusive with the overlapped tensor-MP comm runtime
+    #   (the ring IS the comm schedule).
+    mp_kind: str = "tensor"                # "tensor" | "pipeline" | "context"
     # For mp_kind="tensor": delayed-gradient accumulation count (§4.2).
     # For mp_kind="pipeline": pipeline micro-batches fed through the stages.
     microbatches: int = 1
@@ -47,8 +54,12 @@ class ParallelPlan:
 
     PIPE_RUNTIMES = ("scheduled", "ad")
     COMM_RUNTIMES = ("gspmd", "overlapped")
+    MP_KINDS = ("tensor", "pipeline", "context")
 
     def __post_init__(self):
+        if self.mp_kind not in self.MP_KINDS:
+            raise ValueError(f"unknown mp_kind {self.mp_kind!r}; "
+                             f"expected one of {self.MP_KINDS}")
         if self.runtime not in self.PIPE_RUNTIMES:
             raise ValueError(f"unknown pipeline runtime {self.runtime!r}; "
                              f"expected one of {self.PIPE_RUNTIMES}")
@@ -58,10 +69,19 @@ class ParallelPlan:
         if self.comm_chunks < 1:
             raise ValueError(f"comm_chunks must be >= 1, "
                              f"got {self.comm_chunks}")
+        if self.mp_kind == "context" and self.comm_runtime == "overlapped":
+            raise ValueError(
+                "mp_kind='context' already schedules its own KV ring; "
+                "it cannot combine with comm_runtime='overlapped' "
+                "(use the default 'gspmd' for everything outside the ring)")
 
     @property
     def is_pipeline(self) -> bool:
         return self.mp_kind == "pipeline" and self.model_axis is not None
+
+    @property
+    def is_context(self) -> bool:
+        return self.mp_kind == "context" and self.model_axis is not None
 
     def describe(self, mesh) -> str:
         dp = 1
@@ -73,6 +93,8 @@ class ParallelPlan:
         if self.is_pipeline:
             v = f" v={self.virtual_stages}" if self.virtual_stages > 1 else ""
             sched = f" [{self.schedule}{v}, {self.runtime} runtime]"
+        elif self.is_context:
+            sched = " [kv ring]"
         comm = ""
         if self.comm_runtime != "gspmd":
             c = f" c={self.comm_chunks}" if self.comm_chunks > 1 else ""
@@ -109,3 +131,4 @@ PAPER_BASELINE = ParallelPlan()                                  # DP x tensor-M
 PAPER_DP_ONLY = ParallelPlan(model_axis=None)                    # pure DP
 OPTIMIZED = ParallelPlan(fsdp_axes=("data",))                    # + ZeRO-3
 PAPER_PIPELINE = ParallelPlan(mp_kind="pipeline", microbatches=4)  # §4.4 GPipe
+CONTEXT = ParallelPlan(mp_kind="context")                        # DP x KV-ring CP

@@ -13,6 +13,10 @@ replicated across stages.  ``residual_store_spec`` gives the matching
 stage-dim layout of the scheduled runtime's activation store (the
 ``pipeline_value_and_grad`` residual stash): slots are stage-local, the
 micro-batch dim shards over the DP axes.
+
+Context plans (``plan.mp_kind == "context"``) replicate every parameter
+across the model axis: the axis carries the sequence-sharded KV ring
+(``parallel.context``), so only the batch/fsdp rules engage.
 """
 from __future__ import annotations
 
@@ -46,6 +50,11 @@ class ShardingRules:
         self.mesh = mesh
         self.plan = plan
         self.ms = plan.model_axis
+        if plan.mp_kind == "context":
+            # Context parallelism sequence-shards activations on the model
+            # axis (parallel.context KV ring) but keeps every parameter
+            # REPLICATED across it — only the batch/fsdp rules apply.
+            self.ms = None
         self.msz = _axis_size(mesh, self.ms) if self.ms else 1
         self.fs = plan.fsdp_axes or None
         self.fsz = _axis_size(mesh, self.fs) if self.fs else 1

@@ -29,7 +29,10 @@ The decode tick comes from ``train.steps.make_continuous_steps``: under a
 dp x tp mesh it executes ``transformer.decode_slots_tp`` — the whole layer
 stack inside one shard_map with every Megatron matmul on the chunked
 collective-matmul ppermute rings of ``parallel.collectives`` (no monolithic
-all-gather / all-reduce in the compiled decode HLO).
+all-gather / all-reduce in the compiled decode HLO).  The prefill chunk
+shards the same way (``prefill_chunk_tp``: chunk sequence dim in the
+ring-row role), or — with ``context_axis`` — context-parallel on the
+ppermute KV ring (``prefill_chunk_cp``, ``parallel.context``).
 
 Sampling keys fold ``(request id, tokens generated)`` into the engine seed,
 so a request's random stream is independent of which other requests share
@@ -93,12 +96,16 @@ class ContinuousEngine:
     one shot (still interleaved with decode ticks); > 0 caps the tokens per
     prefill step.  ``mesh``/``model_axis``/``batch_axes`` route the decode
     tick onto the collective-ring TP step when the arch and slot count
-    divide (``transformer.decode_slots_tp_supported``)."""
+    divide (``transformer.decode_slots_tp_supported``) and the prefill
+    chunk onto ``prefill_chunk_tp`` (same rings, the chunk's sequence dim
+    in the ring-row role).  ``context_axis`` instead routes the prefill
+    chunk onto the sequence-sharded KV ring (``prefill_chunk_cp``)."""
 
     def __init__(self, api: ModelApi, params, *, n_slots: int, capacity: int,
                  prefill_chunk: int = 0, temperature: float = 0.0,
                  seed: int = 0, mesh=None, model_axis: Optional[str] = None,
                  batch_axes=(), comm_chunks: int = 1, window=None,
+                 context_axis: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.api = api
         self.params = params
@@ -113,7 +120,8 @@ class ContinuousEngine:
         self._decode_tick, self._prefill_chunk = make_continuous_steps(
             api, n_slots=n_slots, temperature=temperature, mesh=mesh,
             model_axis=model_axis, batch_axes=batch_axes,
-            comm_chunks=comm_chunks, window=window)
+            comm_chunks=comm_chunks, window=window,
+            context_axis=context_axis)
         self.queue: List[Request] = []
         self.active: Dict[int, _Active] = {}       # slot -> state
         self.results: List[RequestResult] = []

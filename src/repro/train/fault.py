@@ -207,7 +207,8 @@ def run_supervised(train_step: Callable, pipeline, cfg, *,
                    like=None, shardings=None, max_restarts: int = 2,
                    restart_backoff_s: float = 0.05,
                    log_fn: Callable[[str], None] = print,
-                   on_checkpoint: Optional[Callable] = None) -> dict:
+                   on_checkpoint: Optional[Callable] = None,
+                   replan_fn: Optional[Callable] = None) -> dict:
     """Process-level supervisor: run ``train_loop`` to completion, restarting
     from the newest *valid* checkpoint (``restore_latest_valid`` skips
     corrupt files) when an attempt dies, up to ``max_restarts`` times with
@@ -216,6 +217,16 @@ def run_supervised(train_step: Callable, pipeline, cfg, *,
     types the restore; ``shardings`` re-shards restored leaves onto the
     current mesh — the elastic grow/shrink path.
 
+    ``replan_fn(device_count) -> (train_step, shardings) | None`` closes the
+    elastic loop: it is called before every attempt with the CURRENT
+    ``jax.device_count()`` so a resume after DP grow/shrink re-runs the
+    planner for the device count it actually has — instead of requiring the
+    caller to replay the old ``--parallel`` spec — and returns the re-planned
+    step + shardings (or None to keep the current pair).
+    ``launch.train --parallel auto --resume`` builds exactly this (a bare
+    ``--resume`` keeps the run's default plan so same-topology resume stays
+    bit-reproducible).
+
     Returns the completing attempt's summary plus ``restarts``."""
     from repro.train.loop import train_loop
 
@@ -223,6 +234,10 @@ def run_supervised(train_step: Callable, pipeline, cfg, *,
         like = jax.eval_shape(init_fn)
     attempt = 0
     while True:
+        if replan_fn is not None:
+            replanned = replan_fn(jax.device_count())
+            if replanned is not None:
+                train_step, shardings = replanned
         state, source = None, "fresh init"
         if cfg.ckpt_dir:
             restored, fname = restore_latest_valid(cfg.ckpt_dir, like,

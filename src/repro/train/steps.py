@@ -57,6 +57,15 @@ def _make_pctx(mesh, plan: ParallelPlan, batch_shardable: bool,
     # slice the expert hidden dim over them instead of gathering weights.
     # Training keeps batch-sharded dispatch (tokens >> weights per step).
     ff_axes = tuple(plan.dp_axes) if (decode or not batch_shardable) else ()
+    if plan.mp_kind == "context":
+        # The model axis hosts the KV ring, not tensor-MP compute: params
+        # stay replicated across it (ShardingRules), activations sequence-
+        # shard inside transformer.cp_block_apply.
+        return ParallelCtx(mesh=mesh, batch_axes=axes if axes else (None,),
+                           model_axis=None, context_axis=plan.model_axis,
+                           moe_ff_axes=ff_axes,
+                           comm_runtime=plan.comm_runtime,
+                           comm_chunks=plan.comm_chunks)
     return ParallelCtx(mesh=mesh, batch_axes=axes if axes else (None,),
                        model_axis=plan.model_axis, moe_ff_axes=ff_axes,
                        comm_runtime=plan.comm_runtime,
@@ -277,7 +286,8 @@ def make_serve_steps(api: ModelApi, *, pctx=None, window=None):
 def make_continuous_steps(api: ModelApi, *, n_slots: int,
                           temperature: float = 0.0, mesh=None,
                           model_axis: Optional[str] = None, batch_axes=(),
-                          comm_chunks: int = 1, window=None):
+                          comm_chunks: int = 1, window=None,
+                          context_axis: Optional[str] = None):
     """Jitted ``(decode_tick, prefill_chunk)`` pair for the continuous-
     batching engine (``serve.continuous``).
 
@@ -291,6 +301,15 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
     chunked collective-matmul rings.  ``prefill_chunk(params, cache, tokens,
     slot)`` extends one slot by a token chunk (slot-mode decode with t > 1,
     causal within the chunk) and returns the chunk's last-position logits.
+
+    The prefill chunk is sharded too: under the tensor-MP mesh it routes
+    through ``transformer.prefill_chunk_tp`` (same collective-matmul rings
+    as the decode tick, the chunk's sequence dim in the ring-row role);
+    with ``context_axis`` set it routes through ``prefill_chunk_cp`` — the
+    chunk sequence-sharded over the ppermute KV ring of
+    ``parallel.context``.  Routing is static per chunk length (jit
+    re-traces per shape), falling back to the single-device slot path when
+    the chunk does not divide.
     """
     from repro.models import transformer as tf_mod
 
@@ -329,8 +348,23 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
     def prefill_chunk(params, cache, tokens, slot):
         from repro.models.api import cache_extract_slot, cache_insert_slot
         sl = cache_extract_slot(cache, slot)
-        logits, sl = api.decode_fn(params, sl, {"tokens": tokens}, None,
-                                   window)
+        t = tokens.shape[1]          # static per trace: routing is per-shape
+        if (mesh is not None and context_axis is not None
+                and tf_mod.prefill_chunk_cp_supported(
+                    cfg, mesh, context_axis, t)):
+            logits, sl = tf_mod.prefill_chunk_cp(
+                cfg, params, sl, {"tokens": tokens}, mesh=mesh,
+                context_axis=context_axis, window_override=window)
+        elif (mesh is not None and model_axis is not None
+                and tf_mod.prefill_chunk_tp_supported(
+                    cfg, mesh, model_axis, t, max(comm_chunks, 1))):
+            logits, sl = tf_mod.prefill_chunk_tp(
+                cfg, params, sl, {"tokens": tokens}, mesh=mesh,
+                model_axis=model_axis, comm_chunks=comm_chunks,
+                window_override=window)
+        else:
+            logits, sl = api.decode_fn(params, sl, {"tokens": tokens}, None,
+                                       window)
         return cache_insert_slot(cache, sl, slot), logits[:, -1]
 
     return (jax.jit(decode_tick, donate_argnums=(1,)),

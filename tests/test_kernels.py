@@ -34,6 +34,27 @@ def test_flash_attention_sweep(b, t, h, hd, dtype, causal, window):
                          - ref.astype(jnp.float32)).max()) < tol
 
 
+@pytest.mark.parametrize("b,t,h,hd", [(1, 70, 2, 32),    # t % block != 0
+                                      (2, 130, 2, 32),   # one partial tail
+                                      (1, 7, 2, 32),     # tq < 16 (min bq)
+                                      (1, 1, 2, 32)])    # single row
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 3), (False, 0)])
+def test_flash_attention_edge_shapes(b, t, h, hd, causal, window):
+    """ISSUE 8 satellite: non-block-multiple sequence lengths, tiny tq below
+    the 16-row minimum block, and window+causal combined — the padded tail
+    rows/cols must be masked out, not attended."""
+    ks = jax.random.split(jax.random.PRNGKey(t * 7 + window), 3)
+    q = _rand(ks[0], (b, t, h, hd), jnp.float32)
+    k = _rand(ks[1], (b, t, h, hd), jnp.float32)
+    v = _rand(ks[2], (b, t, h, hd), jnp.float32)
+    out = FA.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    assert out.shape == ref.shape
+    err = float(jnp.abs(out - ref).max())
+    assert err < 2e-5, (b, t, causal, window, err)
+
+
 def test_flash_attention_cross_lengths():
     """Tq != Tk (non-causal cross attention)."""
     ks = jax.random.split(jax.random.PRNGKey(7), 3)

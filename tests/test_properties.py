@@ -126,7 +126,13 @@ def test_planner_choices_factorize_budget(arch):
             else:
                 assert c.microbatches == 1
                 assert c.schedule == "-" and c.virtual_stages == 1
-                assert c.plan.mp_kind == "tensor"
+                if c.mp_kind == "context":
+                    assert c.plan.mp_kind == "context"
+                    # ring sizes come from the sequence-divisibility-
+                    # filtered cp table (ISSUE 8)
+                    assert c.mp in pl.run.cp_speedup, (arch, c)
+                else:
+                    assert c.plan.mp_kind == "tensor"
 
 
 @pytest.mark.parametrize("arch", PLANNER_ARCHS)
@@ -150,7 +156,10 @@ def test_planner_memory_feasibility(arch):
             assert c.mem_bytes <= hbm, (arch, d, c)
             mem_plain = per_device_mem_bytes(
                 cfg, mp=c.mp,
-                mp_kind="pipeline" if c.mp_kind == "pipeline" else "tensor",
+                # context replicates params across the ring, so its
+                # unsharded point is costed with its own memory model
+                mp_kind=(c.mp_kind if c.mp_kind in ("pipeline", "context")
+                         else "tensor"),
                 fsdp=1, mini_batch=pl.mini_batch, seq_len=pl.seq_len,
                 opt_bytes_per_param=pl.opt_bytes_per_param, remat=pl.remat,
                 microbatches=c.microbatches,
