@@ -1,0 +1,196 @@
+"""Router failover sweep: multi-replica serving goodput under injected faults.
+
+    PYTHONPATH=src python -m benchmarks.router_failover_sweep [--smoke]
+
+Emits ``BENCH_router.json``: the same closed-loop request batch is pushed
+through ``serve.router.ReplicaRouter`` under a grid of fault schedules —
+no fault (baseline), ``kill@N:0``, ``stall@N:0:SECS`` (past the watchdog),
+``nanlogits@N:0`` — and each scenario reports
+
+- **goodput** — completed generated tokens/s over the run's wall clock
+  (shed / timed-out requests contribute nothing, so dropped work shows up
+  as a goodput loss, not just a counter),
+- request-latency p50/p99 (submit -> result),
+- exact accounting: completed / shed / timed_out / failovers, plus the
+  verified invariant that every submitted rid got exactly one result,
+- ``goodput_vs_baseline`` — the bounded-degradation ratio the acceptance
+  criteria pin (losing 1 of R replicas should cost roughly that fraction
+  of throughput, not collapse it),
+
+and a **load-shed** scenario: more requests than the bounded queues admit,
+with deadlines tight enough that the projected-wait check fires — showing
+shed requests rejected at the door while admitted ones still finish.
+
+Wall-clock numbers calibrate the *router* (dispatch, health checks,
+failover replay) on CPU; modeled accelerator decode latency lives in
+``core.planner.decode_step_time``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# prompt_len is FIXED per run: every distinct prompt length retraces the
+# jitted prefill (seconds of XLA compile on CPU), which would both swamp
+# the scheduler wall-clock being measured and trip the health watchdog on
+# retraces rather than injected stalls
+FULL = dict(n_requests=16, replicas=2, n_slots=2, max_new=16,
+            prompt_len=10, fault_tick=6, stall_s=1.0, watchdog_s=0.5)
+SMOKE = dict(n_requests=6, replicas=2, n_slots=2, max_new=6,
+             prompt_len=6, fault_tick=4, stall_s=1.0, watchdog_s=0.5)
+
+
+def _percentile(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return None
+    i = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[i]
+
+
+def _build(cfgv):
+    import numpy as np
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.continuous import Request
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 900, size=cfgv["prompt_len"]).tolist()
+               for _ in range(cfgv["n_requests"])]
+    cfg = get_config("llama3_2_1b").reduced()
+    api = build_model(cfg, remat=False)
+    params = api.init(jax.random.PRNGKey(0))
+    reqs = lambda **kw: [Request(rid=i, tokens=p,
+                                 max_new_tokens=cfgv["max_new"], **kw)
+                         for i, p in enumerate(prompts)]
+    return api, params, cfg, reqs
+
+
+def _scenario(api, params, cfgv, reqs, name, fault_spec, **router_kw):
+    from repro.serve.router import ReplicaRouter
+    from repro.train.fault import parse_fault_schedule
+
+    router = ReplicaRouter(
+        api, params, replicas=cfgv["replicas"], n_slots=cfgv["n_slots"],
+        capacity=cfgv["prompt_len"] + cfgv["max_new"] + 8,
+        faults=parse_fault_schedule(fault_spec) if fault_spec else (),
+        watchdog_timeout_s=cfgv["watchdog_s"], retry_backoff_s=0.01,
+        **router_kw)
+    submit_t, finish_t = {}, {}
+    t0 = time.perf_counter()
+    requests = reqs()
+    for r in requests:
+        submit_t[r.rid] = time.perf_counter() - t0
+        router.submit(r)
+    seen = {res.rid for res in router.results}     # shed at the door
+    for rid in seen:
+        finish_t[rid] = time.perf_counter() - t0
+    while router.step():
+        now = time.perf_counter() - t0
+        for res in router.results:
+            if res.rid not in seen:
+                seen.add(res.rid)
+                finish_t[res.rid] = now
+    wall = time.perf_counter() - t0
+    router.close()
+    results = sorted(router.results, key=lambda r: r.rid)
+    rids_ok = [r.rid for r in results] == sorted(r.rid for r in requests)
+    done = [r for r in results if r.finished_reason in ("eos", "length")]
+    lat = [finish_t[r.rid] - submit_t[r.rid] for r in results
+           if r.rid in finish_t]
+    good_tokens = sum(len(r.tokens) for r in done)
+    rec = {
+        "fault": fault_spec or "none",
+        "wall_s": wall,
+        "goodput_tok_s": good_tokens / max(wall, 1e-9),
+        "good_tokens": good_tokens,
+        "latency_p50_s": _percentile(lat, 50),
+        "latency_p99_s": _percentile(lat, 99),
+        "rid_accounting_exact": rids_ok,
+        "replica_states": router.replica_states,
+        **router.stats,
+    }
+    print(f"router_failover,{name},goodput_tok_s="
+          f"{rec['goodput_tok_s']:.1f},p99_s={rec['latency_p99_s']:.3f},"
+          f"completed={rec['completed']},shed={rec['shed']},"
+          f"timed_out={rec['timed_out']},failovers={rec['failovers']},"
+          f"accounting_ok={rids_ok}", flush=True)
+    return rec
+
+
+def _shed_scenario(api, params, cfgv, reqs):
+    """Bounded queues + tight deadlines: overflow sheds at the door."""
+    from repro.serve.router import ReplicaRouter
+
+    router = ReplicaRouter(
+        api, params, replicas=cfgv["replicas"], n_slots=cfgv["n_slots"],
+        capacity=cfgv["prompt_len"] + cfgv["max_new"] + 8,
+        max_queue=1, est_step_s=5.0)
+    requests = reqs(deadline_s=30.0)
+    for r in requests:
+        router.submit(r)
+    while router.step():
+        pass
+    router.close()
+    results = sorted(router.results, key=lambda r: r.rid)
+    rec = {
+        "max_queue": 1, "deadline_s": 30.0,
+        "rid_accounting_exact":
+            [r.rid for r in results] == sorted(r.rid for r in requests),
+        **router.stats,
+    }
+    print(f"router_failover,shed,completed={rec['completed']},"
+          f"shed={rec['shed']},timed_out={rec['timed_out']},"
+          f"accounting_ok={rec['rid_accounting_exact']}", flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_router.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for the CI smoke lane")
+    args = ap.parse_args(argv)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    cfgv = SMOKE if args.smoke else FULL
+    api, params, cfg, reqs = _build(cfgv)
+    t = cfgv["fault_tick"]
+    scenarios = {
+        "baseline": _scenario(api, params, cfgv, reqs, "baseline", ""),
+        "kill": _scenario(api, params, cfgv, reqs, "kill", f"kill@{t}:0"),
+        "stall": _scenario(api, params, cfgv, reqs, "stall",
+                           f"stall@{t}:0:{cfgv['stall_s']}"),
+        "nanlogits": _scenario(api, params, cfgv, reqs, "nanlogits",
+                               f"nanlogits@{t}:0"),
+    }
+    base = scenarios["baseline"]["goodput_tok_s"]
+    for name, s in scenarios.items():
+        s["goodput_vs_baseline"] = s["goodput_tok_s"] / max(base, 1e-9)
+    rec = {
+        "bench": "router_failover_sweep",
+        "smoke": bool(args.smoke),
+        "arch": cfg.name,
+        "config": cfgv,
+        "scenarios": scenarios,
+        "load_shed": _shed_scenario(api, params, cfgv, reqs),
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"router_failover,done,out={args.out},"
+          f"kill_vs_baseline={scenarios['kill']['goodput_vs_baseline']:.2f}")
+    return 0
+
+
+def run(out: str = "BENCH_router.json") -> None:
+    """benchmarks.run entry."""
+    main(["--out", out])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

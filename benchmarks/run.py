@@ -41,11 +41,13 @@ def main() -> None:
     if full:
         from benchmarks import (collective_overlap_sweep,
                                 context_parallel_sweep, fault_recovery_sweep,
-                                pipeline_schedule_sweep)
+                                pipeline_schedule_sweep,
+                                router_failover_sweep)
         pipeline_schedule_sweep.run()
         collective_overlap_sweep.run()
         context_parallel_sweep.run()
         fault_recovery_sweep.run()
+        router_failover_sweep.run()
 
     print(f"benchmark,done,wall_s={time.time() - t0:.1f}")
 

@@ -352,12 +352,24 @@ def restore_latest_valid(path: str, like: Any, shardings: Any = None
                          ) -> Tuple[Optional[Any], Optional[str]]:
     """Restore the newest checkpoint under ``path`` that passes integrity +
     structure validation, falling back over corrupt/mismatched files
-    newest-first (each skip warns).  Returns ``(state, fname)`` or
-    ``(None, None)`` when no valid checkpoint exists."""
-    for fname in reversed(list_checkpoints(path)):
+    newest-first (each skip warns).  Returns ``(state, fname)``, or
+    ``(None, None)`` when the directory holds no checkpoints at all.
+
+    When checkpoints DO exist but every one fails validation, raises
+    ``CheckpointCorruptionError`` instead: silently returning ``(None,
+    None)`` would make the supervisor fresh-init and loop — retraining from
+    step 0 while reporting a "restart" — when the run actually needs
+    operator attention (all its state is gone)."""
+    candidates = list(list_checkpoints(path))
+    for fname in reversed(candidates):
         try:
             return restore_checkpoint(fname, like, shardings), fname
         except (CheckpointError, ValueError, OSError) as e:
             warnings.warn(f"[checkpoint] skipping {os.path.basename(fname)}: "
                           f"{e}", stacklevel=2)
+    if candidates:
+        raise CheckpointCorruptionError(
+            f"all {len(candidates)} checkpoint(s) under {path} failed "
+            f"validation — refusing to silently fresh-init over an "
+            f"existing run")
     return None, None

@@ -100,6 +100,18 @@ class InferenceChoice:
     def n_devices(self) -> int:
         return self.replicas * self.tp
 
+    def build_router(self, api, params, *, capacity: int, **kw):
+        """Execute this choice rather than just reporting it: instantiate
+        the ``replicas`` x ``tp`` engine groups with ``slots`` lanes each
+        behind a fault-tolerant ``serve.router.ReplicaRouter`` (least-loaded
+        dispatch, health checks, mid-flight failover).  ``capacity`` is the
+        per-slot KV budget in positions; ``kw`` forwards to the router
+        (faults, watchdog, max_queue, ...).  Lazy import: ``core`` stays
+        importable without the serving stack."""
+        from repro.serve.router import ReplicaRouter
+        return ReplicaRouter.from_choice(api, params, self,
+                                         capacity=capacity, **kw)
+
 
 def kv_bytes(cfg: ModelConfig, slots: int, context: int) -> float:
     """bf16 KV cache bytes for ``slots`` requests of ``context`` positions."""

@@ -11,6 +11,13 @@ tick on a dp x tp mesh (forced host devices work for CPU smoke runs)::
     python -m repro.launch.serve --arch llama3_2_1b --reduced \
         --continuous --slots 4 --tp 2 --prefill-chunk 8 \
         --batch 8 --prompt-len 32 --max-new 16
+
+Multi-replica with fault injection (``serve.router.ReplicaRouter``:
+least-loaded dispatch, health-checked failover, bounded queues)::
+
+    python -m repro.launch.serve --arch llama3_2_1b --reduced \
+        --continuous --replicas 2 --slots 4 --max-queue 16 \
+        --fault "kill@5:0" --batch 8 --prompt-len 32 --max-new 16
 """
 from __future__ import annotations
 
@@ -45,6 +52,19 @@ def main():
                     help="tensor-MP ways for the decode tick (needs >= tp "
                     "devices; use XLA_FLAGS=--xla_force_host_platform_"
                     "device_count=N on CPU)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent continuous-engine replica groups "
+                    "behind the fault-tolerant router (tp devices each)")
+    ap.add_argument("--fault", default="",
+                    help="replica-keyed fault schedule, e.g. "
+                    "'kill@5:0, stall@7:1:0.5, nanlogits@9:0'")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on queued requests per replica; overflow "
+                    "is shed (0 = unbounded)")
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="router health watchdog seconds (0 = off). Leave "
+                    "off on cold CPU runs: every distinct prefill-chunk "
+                    "shape retraces for seconds and reads as a stall")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,6 +78,51 @@ def main():
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size, dtype=jnp.int32)
 
     if args.continuous:
+        capacity = args.prompt_len + args.max_new + 8
+        reqs = [Request(rid=i, tokens=[int(t) for t in tokens[i]],
+                        max_new_tokens=args.max_new)
+                for i in range(args.batch)]
+        if args.replicas > 1 or args.fault or args.max_queue:
+            import numpy as np
+            from repro.serve.router import ReplicaRouter
+            from repro.train.fault import parse_fault_schedule
+            meshes = model_axis = None
+            batch_axes = ()
+            if args.tp > 1:
+                devs = jax.devices()
+                need = args.replicas * args.tp
+                if need > len(devs):
+                    raise SystemExit(
+                        f"--replicas {args.replicas} x --tp {args.tp} needs "
+                        f"{need} devices, only {len(devs)} visible")
+                meshes = [jax.sharding.Mesh(
+                    np.asarray(devs[r * args.tp:(r + 1) * args.tp]
+                               ).reshape(1, args.tp), ("data", "model"))
+                    for r in range(args.replicas)]
+                model_axis, batch_axes = "model", ("data",)
+            router = ReplicaRouter(
+                api, params, replicas=args.replicas, n_slots=args.slots,
+                capacity=capacity, prefill_chunk=args.prefill_chunk,
+                temperature=args.temperature, meshes=meshes,
+                model_axis=model_axis, batch_axes=batch_axes,
+                max_queue=args.max_queue or None,
+                faults=parse_fault_schedule(args.fault) if args.fault else (),
+                watchdog_timeout_s=args.watchdog or None, log_fn=print)
+            t0 = time.time()
+            results = router.run(reqs)
+            dt = time.time() - t0
+            router.close()
+            toks = sum(len(r.tokens) for r in results)
+            done = router.stats["completed"]
+            print(f"[serve] router: {toks} tokens in {dt:.2f}s "
+                  f"({toks / dt:.1f} tok/s, replicas={args.replicas}, "
+                  f"tp={args.tp}, completed={done}, "
+                  f"shed={router.stats['shed']}, "
+                  f"timed_out={router.stats['timed_out']}, "
+                  f"failovers={router.stats['failovers']}, "
+                  f"states={router.replica_states})")
+            print("first sequence:", results[0].tokens)
+            return
         mesh = model_axis = None
         if args.tp > 1:
             from repro.parallel.jaxcompat import make_mesh
@@ -68,14 +133,10 @@ def main():
             mesh = make_mesh((n_dev // args.tp, args.tp), ("data", "model"))
             model_axis = "model"
         engine = ContinuousEngine(
-            api, params, n_slots=args.slots,
-            capacity=args.prompt_len + args.max_new + 8,
+            api, params, n_slots=args.slots, capacity=capacity,
             prefill_chunk=args.prefill_chunk, temperature=args.temperature,
             mesh=mesh, model_axis=model_axis,
             batch_axes=("data",) if mesh is not None else ())
-        reqs = [Request(rid=i, tokens=[int(t) for t in tokens[i]],
-                        max_new_tokens=args.max_new)
-                for i in range(args.batch)]
         t0 = time.time()
         results = engine.run(reqs)
         dt = time.time() - t0

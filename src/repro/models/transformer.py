@@ -1040,7 +1040,8 @@ def prefill_chunk_tp_supported(cfg, mesh, model_axis, t: int,
 
 
 def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
-                     comm_chunks: int = 1, window_override=None):
+                     comm_chunks: int = 1, window_override=None,
+                     n_valid: Optional[int] = None):
     """Chunked-prefill "extend" step for ONE slot under the tensor-MP mesh:
     the whole layer stack in one shard_map with every Megatron matmul on
     the chunked collective-matmul rings — the same schedule as training's
@@ -1050,7 +1051,16 @@ def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
 
     ``cache``: ``models.api.cache_extract_slot`` shape — per-layer k/v
     (Lc, 1, capacity, KV, hd) + ``pos`` (1,); batch: dict(tokens (1, t)).
-    Returns (last-token logits (1, 1, V), new slot cache)."""
+    Returns (last-token logits (1, 1, V), new slot cache).
+
+    ``n_valid`` (static, default t) marks a PADDED chunk: only the first
+    ``n_valid`` tokens are real — a non-divisible final chunk padded up to
+    the ring grid.  Logits are taken at position ``n_valid - 1`` and ``pos``
+    advances by ``n_valid``; the pad rows written past it are inert (every
+    attention mask gates on ``pos``) and get overwritten by the next
+    insert at ``pos``.  Causality keeps pad keys invisible to real queries
+    (pad positions are strictly later), so padding never changes the real
+    tokens' math."""
     from repro.parallel.collectives import (all_gather_matmul,
                                             matmul_reduce_scatter,
                                             ring_all_gather)
@@ -1058,6 +1068,7 @@ def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
     tokens = batch["tokens"]
     pos = cache["pos"]
     b, t = tokens.shape
+    nv = t if n_valid is None else int(n_valid)
     msz = mesh.shape[model_axis]
     t_loc = t // msz
     chunks = max(comm_chunks, 1)
@@ -1120,7 +1131,7 @@ def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
             body, xl, (p["layers"], layer_caches),
             unroll=cfg.n_layers if L.analysis_unroll() else 1)
         x_full = ring_all_gather(xl, **kw)                # (1, t, d)
-        logits = _head(cfg, p, x_full[:, -1:])            # (1, 1, V)
+        logits = _head(cfg, p, x_full[:, nv - 1:nv])      # (1, 1, V)
         return logits, new_caches
 
     col, row = P(None, None, model_axis), P(None, model_axis, None)
@@ -1142,7 +1153,7 @@ def prefill_chunk_tp(cfg, params, cache, batch, *, mesh, model_axis: str,
                   P(None, None), P(None)),
         out_specs=(P(None, None, None), {"k": c_spec, "v": c_spec}))(
             params, layer_caches, tokens, pos)
-    new_caches["pos"] = pos + t
+    new_caches["pos"] = pos + nv
     return logits, new_caches
 
 
@@ -1160,7 +1171,7 @@ def prefill_chunk_cp_supported(cfg, mesh, context_axis, t: int) -> bool:
 
 
 def prefill_chunk_cp(cfg, params, cache, batch, *, mesh, context_axis: str,
-                     window_override=None):
+                     window_override=None, n_valid: Optional[int] = None):
     """Chunked-prefill "extend" step for ONE slot with the chunk
     CONTEXT-PARALLEL: the chunk's sequence dim shards over the ring,
     in-chunk attention rides ``parallel.context.ring_attention_stats``
@@ -1170,13 +1181,16 @@ def prefill_chunk_cp(cfg, params, cache, batch, *, mesh, context_axis: str,
     chunk's new KV rows reassemble on a ``ring_all_gather`` (ppermute-only)
     for the replicated cache insert.  Weights stay fully replicated.
 
-    Same signature/shapes as ``prefill_chunk_tp``."""
+    Same signature/shapes as ``prefill_chunk_tp``, including the
+    ``n_valid`` padded-final-chunk contract (pad tokens land on the tail
+    devices of the ring and are masked/overwritten the same way)."""
     from repro.parallel.collectives import ring_all_gather
     from repro.parallel.context import ring_attention_stats
     window = cfg.sliding_window if window_override is None else window_override
     tokens = batch["tokens"]
     pos = cache["pos"]
     b, t = tokens.shape
+    nv = t if n_valid is None else int(n_valid)
     csz = mesh.shape[context_axis]
     t_loc = t // csz
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -1236,7 +1250,7 @@ def prefill_chunk_cp(cfg, params, cache, batch, *, mesh, context_axis: str,
             body, xl, (p["layers"], layer_caches),
             unroll=cfg.n_layers if L.analysis_unroll() else 1)
         x_full = ring_all_gather(xl, **gkw)               # (1, t, d)
-        logits = _head(cfg, p, x_full[:, -1:])            # (1, 1, V)
+        logits = _head(cfg, p, x_full[:, nv - 1:nv])      # (1, 1, V)
         return logits, new_caches
 
     p_specs = jax.tree.map(lambda a: P(*(None,) * jnp.ndim(a)), params)
@@ -1248,5 +1262,5 @@ def prefill_chunk_cp(cfg, params, cache, batch, *, mesh, context_axis: str,
                   P(None, None), P(None)),
         out_specs=(P(None, None, None), {"k": c_spec, "v": c_spec}))(
             params, layer_caches, tokens, pos)
-    new_caches["pos"] = pos + t
+    new_caches["pos"] = pos + nv
     return logits, new_caches

@@ -1,5 +1,6 @@
 from repro.serve.continuous import ContinuousEngine, Request, RequestResult
 from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.router import ReplicaRouter
 
-__all__ = ["ContinuousEngine", "GenerationResult", "Request",
-           "RequestResult", "ServeEngine"]
+__all__ = ["ContinuousEngine", "GenerationResult", "ReplicaRouter",
+           "Request", "RequestResult", "ServeEngine"]

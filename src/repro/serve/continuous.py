@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine over a slotted KV cache.
+r"""Continuous-batching serving engine over a slotted KV cache.
 
 Slot/admission model
 ====================
@@ -65,6 +65,16 @@ class Request:
     # finished_reason="timed_out" and whatever tokens were generated.  One
     # stalled long request can therefore never starve admission forever.
     deadline_s: Optional[float] = None
+    # Failover resume (``serve.router``): tokens this request already
+    # generated on a replica that died mid-flight, plus their logprobs.  The
+    # engine prefills the prompt exactly as a fresh run would, then REPLAYS
+    # these tokens through the same decode ticks that produced them (forced
+    # instead of sampled) — reconstructing the unfaulted computation op for
+    # op, so the continuation's tokens/logprobs are bit-identical to a run
+    # that never failed over.  (A one-shot re-prefill of prompt + generated
+    # would reorder the attention reductions and drift in the last bits.)
+    replay_tokens: Sequence[int] = ()
+    replay_logprobs: Sequence[float] = ()
 
 
 @dataclasses.dataclass
@@ -73,7 +83,7 @@ class RequestResult:
     prompt_len: int
     tokens: List[int]                # generated ids (stop token included)
     logprobs: List[float]
-    finished_reason: str             # "eos" | "length" | "timed_out"
+    finished_reason: str             # "eos" | "length" | "timed_out" | "shed"
 
 
 @dataclasses.dataclass
@@ -106,6 +116,7 @@ class ContinuousEngine:
                  seed: int = 0, mesh=None, model_axis: Optional[str] = None,
                  batch_axes=(), comm_chunks: int = 1, window=None,
                  context_axis: Optional[str] = None,
+                 max_queue: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.api = api
         self.params = params
@@ -113,11 +124,13 @@ class ContinuousEngine:
         self.capacity = capacity
         self.prefill_chunk = prefill_chunk
         self.temperature = temperature
+        self.max_queue = max_queue    # bound on queued (not-yet-admitted) reqs
         self._clock = clock           # injectable for deterministic TTL tests
         self._deadline: Dict[int, float] = {}    # rid -> absolute deadline
         self._base_key = jax.random.PRNGKey(seed)
         self.cache = make_slot_cache(api.cfg, n_slots, capacity)
-        self._decode_tick, self._prefill_chunk = make_continuous_steps(
+        (self._decode_tick, self._prefill_chunk,
+         self._prefill_grid) = make_continuous_steps(
             api, n_slots=n_slots, temperature=temperature, mesh=mesh,
             model_axis=model_axis, batch_axes=batch_axes,
             comm_chunks=comm_chunks, window=window,
@@ -125,19 +138,79 @@ class ContinuousEngine:
         self.queue: List[Request] = []
         self.active: Dict[int, _Active] = {}       # slot -> state
         self.results: List[RequestResult] = []
+        self.ticks = 0                # completed step() count (heartbeat)
+        self._poison_ticks = 0        # fault hook: decode ticks to NaN out
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> Optional[RequestResult]:
+        """Enqueue ``req``.  Returns ``None`` on acceptance; when
+        ``max_queue`` is set and the queue is full, the request is REJECTED
+        with a shaped ``RequestResult(finished_reason="shed")`` (appended to
+        ``results`` and returned) instead of growing the queue without
+        bound.  A rid already in flight raises: deadlines and results are
+        rid-keyed, so a duplicate would silently overwrite the first
+        request's deadline and corrupt its accounting."""
+        in_flight = ({r.rid for r in self.queue}
+                     | {st.req.rid for st in self.active.values()})
+        if req.rid in in_flight:
+            raise ValueError(
+                f"request {req.rid}: a request with rid {req.rid} is already "
+                f"in flight (queued or holding a slot) — rids key deadlines "
+                f"and results, so submit each rid at most once until its "
+                f"result is returned")
         n = len(req.tokens)
         if n + req.max_new_tokens > self.capacity:
             raise ValueError(
                 f"request {req.rid}: prompt ({n}) + max_new_tokens "
                 f"({req.max_new_tokens}) = {n + req.max_new_tokens} exceeds "
                 f"slot capacity {self.capacity}")
+        if len(req.replay_tokens) != len(req.replay_logprobs):
+            raise ValueError(
+                f"request {req.rid}: {len(req.replay_tokens)} replay tokens "
+                f"but {len(req.replay_logprobs)} replay logprobs — the "
+                f"failover resume needs one logprob per replayed token")
+        if len(req.replay_tokens) > req.max_new_tokens:
+            raise ValueError(
+                f"request {req.rid}: {len(req.replay_tokens)} replay tokens "
+                f"exceed max_new_tokens ({req.max_new_tokens})")
+        if self._prefill_grid > 1:
+            # sharded prefill pads the final chunk up to the ring grid; the
+            # padded rows must still land inside the slot's linear region
+            t_f = (n if self.prefill_chunk <= 0
+                   else (n % self.prefill_chunk or self.prefill_chunk))
+            pad = -t_f % self._prefill_grid
+            if n + pad > self.capacity:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({n}) + sharded-prefill pad "
+                    f"({pad}, grid {self._prefill_grid}) exceeds slot "
+                    f"capacity {self.capacity} — grow capacity by the pad "
+                    f"slack or align the prompt to the chunk grid")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            res = RequestResult(rid=req.rid, prompt_len=n, tokens=[],
+                                logprobs=[], finished_reason="shed")
+            self.results.append(res)
+            return res
         if req.deadline_s is not None:
             self._deadline[req.rid] = self._clock() + req.deadline_s
         self.queue.append(req)
+        return None
+
+    def take_queued(self) -> List[Request]:
+        """Remove and return every not-yet-admitted request — the router's
+        drain/failover hook (queued requests hold no slot state, so they can
+        re-dispatch to another replica as-is)."""
+        out, self.queue = self.queue, []
+        for r in out:
+            self._deadline.pop(r.rid, None)
+        return out
+
+    def poison_decode_ticks(self, n: int = 1) -> None:
+        """Fault hook (``serve.router`` nanlogits injection): the next ``n``
+        decode ticks return NaN logprobs (and token 0) for every live row,
+        emulating a replica whose math went bad (ECC fault, bad reduction).
+        Consumed only by ticks that actually decode."""
+        self._poison_ticks += n
 
     def _expire(self):
         """Evict every request past its deadline — mid-flight requests free
@@ -224,11 +297,16 @@ class ContinuousEngine:
             for st in deco:
                 # the token a decode tick consumes is sampled from the
                 # PREVIOUS position's logits: held host-side at the
-                # prefill->decode seam, in-tick afterwards
+                # prefill->decode seam, in-tick afterwards.  A failover
+                # resume splices its recorded token instead of sampling.
                 if not st.tokens:
-                    nxt, lp = self._sample_from(st)
-                    st.tokens.append(nxt)
-                    st.logprobs.append(lp)
+                    if st.req.replay_tokens:
+                        st.tokens.append(int(st.req.replay_tokens[0]))
+                        st.logprobs.append(float(st.req.replay_logprobs[0]))
+                    else:
+                        nxt, lp = self._sample_from(st)
+                        st.tokens.append(nxt)
+                        st.logprobs.append(lp)
                     st.n_gen += 1
             live = [st for st in deco
                     if not self._hit_stop(st)
@@ -242,9 +320,23 @@ class ContinuousEngine:
                 self.cache, nxt, lp = self._decode_tick(
                     self.params, self.cache, tokens, active, keys)
                 nxt, lp = jax.device_get((nxt, lp))
+                poisoned = self._poison_ticks > 0
+                if poisoned:
+                    self._poison_ticks -= 1
                 for st in live:
-                    st.tokens.append(int(nxt[st.slot]))
-                    st.logprobs.append(float(lp[st.slot]))
+                    k = st.n_gen
+                    if k < len(st.req.replay_tokens):
+                        # replay: the tick ran (extending the cache exactly
+                        # as the original decode did) but the output is the
+                        # recorded token, not a fresh sample
+                        st.tokens.append(int(st.req.replay_tokens[k]))
+                        st.logprobs.append(float(st.req.replay_logprobs[k]))
+                    elif poisoned:
+                        st.tokens.append(0)
+                        st.logprobs.append(float("nan"))
+                    else:
+                        st.tokens.append(int(nxt[st.slot]))
+                        st.logprobs.append(float(lp[st.slot]))
                     st.n_gen += 1
 
         # (4) evict finished requests, freeing slots for the next admit
@@ -257,6 +349,7 @@ class ContinuousEngine:
                 st.tokens = st.tokens[:st.req.max_new_tokens]
                 st.logprobs = st.logprobs[:st.req.max_new_tokens]
                 self._finish(st, "length")
+        self.ticks += 1            # progress heartbeat (router health checks)
         return bool(self.active or self.queue)
 
     def _hit_stop(self, st: _Active) -> bool:

@@ -29,6 +29,19 @@ Fault kinds (``kind@step`` grammar, comma-separated):
 A fault at step N fires when step N is *about to run* (the last completed
 step is N-1), so "kill@N, resume" and an uninterrupted run execute the
 exact same sequence of step transitions.
+
+**Replica-keyed serving faults** (``serve.router``): the same grammar
+addresses a replica group instead of the training loop — ``N`` is the
+router tick about to run, ``R`` the replica index:
+
+- ``kill@N:R`` — replica R dies before router tick N (its engine is gone;
+  in-flight requests fail over to a healthy replica).
+- ``stall@N:R:SECS`` — replica R hangs SECS seconds inside tick N; the
+  router's per-replica ``Watchdog`` flags it.  Disambiguated from the
+  training form by arg count (two ``:`` args = replica form).
+- ``nanlogits@N:R`` — replica R's tick N produces NaN logprobs (a silent
+  numerical fault, e.g. a flipped bit in an accumulator); the router's
+  logit health check marks the replica degraded.
 """
 from __future__ import annotations
 
@@ -45,7 +58,7 @@ from repro.checkpoint import restore_latest_valid
 
 KILL_EXIT_CODE = 17     # distinctive exit for injected preemption
 
-FAULT_KINDS = ("fail", "kill", "corrupt", "stall")
+FAULT_KINDS = ("fail", "kill", "corrupt", "stall", "nanlogits")
 CORRUPT_MODES = ("bitflip", "truncate")
 
 
@@ -55,11 +68,12 @@ class InjectedFault(RuntimeError):
 
 @dataclasses.dataclass
 class Fault:
-    kind: str                 # "fail" | "kill" | "corrupt" | "stall"
-    step: int                 # the step the fault is keyed to
+    kind: str                 # "fail" | "kill" | "corrupt" | "stall" | "nanlogits"
+    step: int                 # the step (or router tick) the fault is keyed to
     times: int = 1            # fail: consecutive raises before clearing
     mode: str = "bitflip"     # corrupt: "bitflip" | "truncate"
     seconds: float = 0.25     # stall: sleep duration
+    replica: Optional[int] = None   # serving faults: target replica index
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -70,10 +84,20 @@ class Fault:
                              f"expected one of {CORRUPT_MODES}")
         if self.step < 1:
             raise ValueError(f"fault step must be >= 1, got {self.step}")
+        if self.kind == "nanlogits" and self.replica is None:
+            raise ValueError("nanlogits faults are replica-keyed: "
+                             "use nanlogits@N:R")
+        if self.replica is not None and self.replica < 0:
+            raise ValueError(f"fault replica must be >= 0, got {self.replica}")
 
 
 def parse_fault_schedule(spec: str) -> List[Fault]:
-    """Parse ``"fail@5x2, kill@7, corrupt@10:truncate, stall@3:0.4"``."""
+    """Parse ``"fail@5x2, kill@7, corrupt@10:truncate, stall@3:0.4"``.
+
+    Replica-keyed serving forms (``serve.router``): ``kill@N:R``,
+    ``stall@N:R:SECS``, ``nanlogits@N:R``.  ``stall`` is disambiguated by
+    arg count — one ``:`` arg is the training form (seconds), two is the
+    replica form (replica, seconds)."""
     faults = []
     for item in spec.split(","):
         item = item.strip()
@@ -83,21 +107,41 @@ def parse_fault_schedule(spec: str) -> List[Fault]:
             raise ValueError(f"fault {item!r}: expected kind@step[...]")
         kind, _, rest = item.partition("@")
         kind = kind.strip()
-        arg = None
-        if ":" in rest:
-            rest, _, arg = rest.partition(":")
+        parts = rest.split(":")
+        rest, args = parts[0], parts[1:]
         times = 1
         if "x" in rest:
             rest, _, t = rest.partition("x")
             times = int(t)
         step = int(rest)
         if kind == "corrupt":
-            faults.append(Fault(kind, step, mode=arg or "bitflip"))
+            if len(args) > 1:
+                raise ValueError(f"fault {item!r}: corrupt takes at most "
+                                 f"one ':' arg (the mode)")
+            faults.append(Fault(kind, step, mode=args[0] if args else "bitflip"))
         elif kind == "stall":
+            if len(args) == 2:          # replica form: stall@N:R:SECS
+                faults.append(Fault(kind, step, replica=int(args[0]),
+                                    seconds=float(args[1])))
+            elif len(args) <= 1:
+                faults.append(Fault(kind, step,
+                                    seconds=float(args[0]) if args else 0.25))
+            else:
+                raise ValueError(f"fault {item!r}: stall takes SECS or "
+                                 f"R:SECS after the step")
+        elif kind == "kill":
+            if len(args) > 1:
+                raise ValueError(f"fault {item!r}: kill takes at most "
+                                 f"one ':' arg (the replica)")
             faults.append(Fault(kind, step,
-                                seconds=float(arg) if arg else 0.25))
+                                replica=int(args[0]) if args else None))
+        elif kind == "nanlogits":
+            if len(args) != 1:
+                raise ValueError(f"fault {item!r}: nanlogits is "
+                                 f"replica-keyed — use nanlogits@N:R")
+            faults.append(Fault(kind, step, replica=int(args[0])))
         else:
-            if arg is not None:
+            if args:
                 raise ValueError(f"fault {item!r}: {kind} takes no ':' arg")
             faults.append(Fault(kind, step, times=times))
     return faults
@@ -208,11 +252,14 @@ def run_supervised(train_step: Callable, pipeline, cfg, *,
                    restart_backoff_s: float = 0.05,
                    log_fn: Callable[[str], None] = print,
                    on_checkpoint: Optional[Callable] = None,
-                   replan_fn: Optional[Callable] = None) -> dict:
+                   replan_fn: Optional[Callable] = None,
+                   sleep_fn: Callable[[float], None] = time.sleep) -> dict:
     """Process-level supervisor: run ``train_loop`` to completion, restarting
     from the newest *valid* checkpoint (``restore_latest_valid`` skips
     corrupt files) when an attempt dies, up to ``max_restarts`` times with
-    exponential backoff.  ``init_fn() -> state`` builds the step-0 state when
+    exponential backoff (``sleep_fn`` injects the backoff sleep so tests can
+    pin the wait sequence without wall-clock time).
+    ``init_fn() -> state`` builds the step-0 state when
     no checkpoint exists; ``like`` (default: ``jax.eval_shape(init_fn)``)
     types the restore; ``shardings`` re-shards restored leaves onto the
     current mesh — the elastic grow/shrink path.
@@ -261,4 +308,4 @@ def run_supervised(train_step: Callable, pipeline, cfg, *,
             delay = restart_backoff_s * (2 ** (attempt - 1))
             log_fn(f"[supervisor] attempt died ({type(e).__name__}: {e}); "
                    f"restarting in {delay:.2f}s")
-            time.sleep(delay)
+            sleep_fn(delay)

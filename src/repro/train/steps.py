@@ -288,8 +288,8 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
                           model_axis: Optional[str] = None, batch_axes=(),
                           comm_chunks: int = 1, window=None,
                           context_axis: Optional[str] = None):
-    """Jitted ``(decode_tick, prefill_chunk)`` pair for the continuous-
-    batching engine (``serve.continuous``).
+    """Jitted ``(decode_tick, prefill_chunk, prefill_grid)`` triple for the
+    continuous-batching engine (``serve.continuous``).
 
     ``decode_tick(params, cache, tokens, active, keys)`` runs ONE token step
     for every slot of a slotted cache — sampling happens inside the jit, and
@@ -308,8 +308,13 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
     with ``context_axis`` set it routes through ``prefill_chunk_cp`` — the
     chunk sequence-sharded over the ppermute KV ring of
     ``parallel.context``.  Routing is static per chunk length (jit
-    re-traces per shape), falling back to the single-device slot path when
-    the chunk does not divide.
+    re-traces per shape).  A chunk that does not divide the ring —
+    typically a prompt's final chunk — is PADDED up to ``prefill_grid``
+    (ring size x comm chunks for TP, ring size for CP) and runs the SAME
+    sharded path with ``n_valid`` marking the real length; there is no
+    single-device fallback once the arch supports the sharded step.  The
+    returned ``prefill_grid`` (1 when unsharded) lets the engine validate
+    that the pad rows fit the slot capacity.
     """
     from repro.models import transformer as tf_mod
 
@@ -318,6 +323,19 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
               and tf_mod.decode_slots_tp_supported(
                   cfg, mesh, model_axis, batch_axes, n_slots,
                   max(comm_chunks, 1)))
+    # sharded-prefill routing is arch/mesh-static; only the chunk length
+    # varies per call, and padding makes every length divide the grid
+    cp_grid = tp_grid = 0
+    if mesh is not None and context_axis is not None:
+        csz = mesh.shape[context_axis]
+        if tf_mod.prefill_chunk_cp_supported(cfg, mesh, context_axis, csz):
+            cp_grid = csz
+    if not cp_grid and mesh is not None and model_axis is not None:
+        msz = mesh.shape[model_axis]
+        g = msz * max(comm_chunks, 1)
+        if tf_mod.prefill_chunk_tp_supported(cfg, mesh, model_axis, g,
+                                             max(comm_chunks, 1)):
+            tp_grid = g
 
     def _sample(last, keys):
         last = last.astype(jnp.float32)
@@ -349,23 +367,27 @@ def make_continuous_steps(api: ModelApi, *, n_slots: int,
         from repro.models.api import cache_extract_slot, cache_insert_slot
         sl = cache_extract_slot(cache, slot)
         t = tokens.shape[1]          # static per trace: routing is per-shape
-        if (mesh is not None and context_axis is not None
-                and tf_mod.prefill_chunk_cp_supported(
-                    cfg, mesh, context_axis, t)):
-            logits, sl = tf_mod.prefill_chunk_cp(
-                cfg, params, sl, {"tokens": tokens}, mesh=mesh,
-                context_axis=context_axis, window_override=window)
-        elif (mesh is not None and model_axis is not None
-                and tf_mod.prefill_chunk_tp_supported(
-                    cfg, mesh, model_axis, t, max(comm_chunks, 1))):
-            logits, sl = tf_mod.prefill_chunk_tp(
-                cfg, params, sl, {"tokens": tokens}, mesh=mesh,
-                model_axis=model_axis, comm_chunks=comm_chunks,
-                window_override=window)
+        if cp_grid or tp_grid:
+            grid = cp_grid or tp_grid
+            t_pad = -(-t // grid) * grid
+            toks = (tokens if t_pad == t else
+                    jnp.pad(tokens, ((0, 0), (0, t_pad - t))))
+            nv = t if t_pad != t else None
+            if cp_grid:
+                logits, sl = tf_mod.prefill_chunk_cp(
+                    cfg, params, sl, {"tokens": toks}, mesh=mesh,
+                    context_axis=context_axis, window_override=window,
+                    n_valid=nv)
+            else:
+                logits, sl = tf_mod.prefill_chunk_tp(
+                    cfg, params, sl, {"tokens": toks}, mesh=mesh,
+                    model_axis=model_axis, comm_chunks=comm_chunks,
+                    window_override=window, n_valid=nv)
         else:
             logits, sl = api.decode_fn(params, sl, {"tokens": tokens}, None,
                                        window)
         return cache_insert_slot(cache, sl, slot), logits[:, -1]
 
     return (jax.jit(decode_tick, donate_argnums=(1,)),
-            jax.jit(prefill_chunk, donate_argnums=(1,)))
+            jax.jit(prefill_chunk, donate_argnums=(1,)),
+            cp_grid or tp_grid or 1)

@@ -140,9 +140,24 @@ def test_truncation_detected(tmp_path):
     corrupt_checkpoint(f, "truncate")
     with pytest.raises(CheckpointCorruptionError):
         verify_checkpoint(f)
+
+
+def test_all_corrupt_directory_raises_not_fresh_init(tmp_path):
+    """Every checkpoint corrupt -> typed error, NOT (None, None): silently
+    returning nothing would make the supervisor fresh-init at step 0 and
+    loop, masking total state loss as a routine restart."""
+    state = _tiny_state()
+    for step in (1, 2):
+        corrupt_checkpoint(save_checkpoint(str(tmp_path), state, step),
+                           "truncate")
     with pytest.warns(UserWarning, match="skipping"):
-        assert restore_latest_valid(str(tmp_path),
-                                    _like(state)) == (None, None)
+        with pytest.raises(CheckpointCorruptionError,
+                           match=r"all 2 checkpoint\(s\).*failed"):
+            restore_latest_valid(str(tmp_path), _like(state))
+    # an empty directory is still a clean fresh start, not an error
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert restore_latest_valid(str(empty), _like(state)) == (None, None)
 
 
 def test_verify_checkpoint_reports_manifest(tmp_path):
@@ -209,6 +224,28 @@ def test_parse_fault_schedule():
         parse_fault_schedule("explode@3")
     with pytest.raises(ValueError, match="unknown corrupt mode"):
         Fault("corrupt", 3, mode="scribble")
+
+
+def test_parse_replica_fault_schedule():
+    """The serving extension of the grammar: replica-keyed forms for the
+    multi-replica router.  ``stall`` disambiguates by arg count — one arg
+    is the training form (seconds), two is the replica form
+    (replica, seconds)."""
+    faults = parse_fault_schedule(
+        "kill@5:1, stall@7:0:0.5, nanlogits@9:1, stall@3:0.4, kill@8")
+    assert [(f.kind, f.step, f.replica) for f in faults] == [
+        ("kill", 5, 1), ("stall", 7, 0), ("nanlogits", 9, 1),
+        ("stall", 3, None), ("kill", 8, None)]
+    assert faults[1].seconds == pytest.approx(0.5)
+    assert faults[3].seconds == pytest.approx(0.4)   # training form intact
+    with pytest.raises(ValueError, match="nanlogits.*replica"):
+        parse_fault_schedule("nanlogits@9")          # requires a replica
+    with pytest.raises(ValueError, match="replica"):
+        Fault("nanlogits", 9)
+    with pytest.raises(ValueError, match="replica must be >= 0"):
+        Fault("kill", 5, replica=-1)
+    with pytest.raises(ValueError):
+        parse_fault_schedule("fail@5:1")             # fail takes no args
 
 
 def _recording_pipeline(n_per_epoch=5, known_spe=True):
@@ -352,6 +389,20 @@ def test_supervisor_recovers_bit_equal_to_uninterrupted(tmp_path):
     b = jax.device_get(summary["state"])
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_supervisor_backoff_sequence_pinned():
+    """The restart backoff doubles per attempt; ``sleep_fn`` injection pins
+    the exact wait sequence without burning wall-clock time."""
+    waits = []
+    inj = FaultInjector([Fault("fail", 2, times=100)], log_fn=lambda m: None)
+    cfg = LoopConfig(total_steps=4, max_retries=0, retry_backoff_s=0.0)
+    with pytest.raises(InjectedFault):
+        run_supervised(inj.wrap_step(_recording_step([])),
+                       _recording_pipeline(), cfg, init_fn=_zero_state,
+                       max_restarts=3, restart_backoff_s=0.05,
+                       log_fn=lambda m: None, sleep_fn=waits.append)
+    assert waits == pytest.approx([0.05, 0.10, 0.20])
 
 
 # -- CLI kill + resume (subprocess) ------------------------------------------

@@ -251,3 +251,116 @@ def test_tp_decode_matches_single_device_and_hlo_is_ring_only():
         print("TP_OK", st.ops)
     """)
     assert "TP_OK" in out
+
+
+def test_duplicate_inflight_rid_rejected():
+    """rids key deadlines and results: a duplicate in-flight rid raises a
+    shaped error instead of silently corrupting the first request's
+    accounting — both while queued and while holding a slot."""
+    cfg, api, params = _setup()
+    eng = ContinuousEngine(api, params, n_slots=1, capacity=32)
+    eng.submit(Request(rid=3, tokens=[1, 2], max_new_tokens=4))
+    with pytest.raises(ValueError, match="rid 3 is already in flight"):
+        eng.submit(Request(rid=3, tokens=[5, 6], max_new_tokens=4))  # queued
+    eng.step()
+    with pytest.raises(ValueError, match="rid 3 is already in flight"):
+        eng.submit(Request(rid=3, tokens=[5, 6], max_new_tokens=4))  # active
+    while eng.step():
+        pass
+    # the rid is reusable once its result is out
+    assert eng.submit(Request(rid=3, tokens=[5, 6], max_new_tokens=2)) is None
+    while eng.step():
+        pass
+    assert sum(r.rid == 3 for r in eng.results) == 2
+
+
+def test_max_queue_overflow_sheds_with_shaped_result():
+    """Bounded admission: queue overflow is rejected with a shaped
+    finished_reason="shed" result (returned AND appended to results) rather
+    than growing the backlog without bound; admitted work is unaffected."""
+    cfg, api, params = _setup()
+    eng = ContinuousEngine(api, params, n_slots=1, capacity=32, max_queue=1)
+    assert eng.submit(Request(rid=0, tokens=[1, 2], max_new_tokens=3)) is None
+    shed = eng.submit(Request(rid=1, tokens=[3, 4], max_new_tokens=3))
+    assert shed is not None and shed.finished_reason == "shed"
+    assert shed.tokens == [] and shed.rid == 1
+    while eng.step():
+        pass
+    res = {r.rid: r for r in eng.results}
+    assert set(res) == {0, 1}
+    assert res[1].finished_reason == "shed"
+    assert res[0].tokens == _solo(api, params, [1, 2], 3).tokens
+
+
+def test_replay_resume_bit_identical():
+    """The failover primitive: re-prefilling the PROMPT and replaying the
+    already-generated tokens through decode ticks reconstructs the original
+    computation — the continuation is bit-identical (tokens AND logprob
+    bits) to the uninterrupted run."""
+    cfg, api, params = _setup()
+    prompt = list(range(1, 6))
+    solo = _solo(api, params, prompt, 8)
+    for k in (1, 4):
+        eng = ContinuousEngine(api, params, n_slots=2, capacity=32)
+        res = eng.run([Request(
+            rid=0, tokens=prompt, max_new_tokens=8,
+            replay_tokens=tuple(solo.tokens[:k]),
+            replay_logprobs=tuple(solo.logprobs[:k]))])[0]
+        assert res.tokens == solo.tokens, k
+        assert res.logprobs == solo.logprobs, k
+    eng = ContinuousEngine(api, params, n_slots=2, capacity=32)
+    with pytest.raises(ValueError, match="one logprob per replayed token"):
+        eng.submit(Request(rid=0, tokens=prompt, max_new_tokens=8,
+                           replay_tokens=(1, 2), replay_logprobs=(0.0,)))
+    with pytest.raises(ValueError, match="exceed max_new_tokens"):
+        eng.submit(Request(rid=0, tokens=prompt, max_new_tokens=1,
+                           replay_tokens=(1, 2),
+                           replay_logprobs=(0.0, 0.0)))
+
+
+def test_nondivisible_prefill_chunk_uses_sharded_padded_path():
+    """Non-divisible final prefill chunks run the SAME sharded TP path,
+    padded up to the ring grid with ``n_valid`` masking (no single-device
+    fallback): token parity with one-shot single-device prefill, and the
+    pad-slack capacity guard rejects prompts whose pad rows overflow."""
+    out = _run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.parallel.jaxcompat import make_mesh
+        from repro.serve import ContinuousEngine, Request
+
+        cfg = get_config("llama3_2_1b").reduced()
+        api = build_model(cfg, remat=False)
+        params = api.init(jax.random.PRNGKey(0))
+        mesh = make_mesh((1, 2), ("data", "model"))
+
+        # prompt 7 with chunk 3 -> chunks 3,3,1: none divide the tp grid
+        req = lambda: [Request(rid=0, tokens=list(range(1, 8)),
+                               max_new_tokens=5)]
+        ref = ContinuousEngine(api, params, n_slots=2, capacity=32).run(req())
+        eng = ContinuousEngine(api, params, n_slots=2, capacity=32,
+                               prefill_chunk=3, mesh=mesh,
+                               model_axis="model", batch_axes=("data",))
+        assert eng._prefill_grid == 2, eng._prefill_grid   # sharded, padded
+        tp = eng.run(req())
+        assert tp[0].tokens == ref[0].tokens, (tp[0].tokens, ref[0].tokens)
+        np.testing.assert_allclose(tp[0].logprobs, ref[0].logprobs,
+                                   rtol=2e-4, atol=2e-4)
+
+        # pad-slack guard: a full-capacity odd prompt's pad row overflows
+        tight = ContinuousEngine(api, params, n_slots=2, capacity=7,
+                                 mesh=mesh, model_axis="model",
+                                 batch_axes=("data",))
+        try:
+            tight.submit(Request(rid=1, tokens=list(range(1, 8)),
+                                 max_new_tokens=0))
+        except ValueError as e:
+            assert "sharded-prefill pad" in str(e), e
+        else:
+            raise AssertionError("pad overflow accepted")
+        print("PAD_OK")
+    """)
+    assert "PAD_OK" in out
